@@ -1,0 +1,38 @@
+"""Shared benchmark utilities.
+
+Benchmarks run on this container's single CPU device; they reproduce the
+paper's *comparative structure* (which scheme wins on which matrix class and
+why), with kernel work measured directly (XLA path) and transfer terms from
+the TPU hardware model (core/adaptive.py HardwareModel — the same constants
+as §Roofline).  Each module prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.adaptive import HardwareModel
+
+HW = HardwareModel(chips=256)
+
+
+def time_call(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall time of a jitted call, in microseconds."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def row(name: str, us: float, derived: str):
+    print(f"{name},{us:.1f},{derived}")
+
+
+def header(title: str):
+    print(f"# --- {title}")

@@ -1,0 +1,77 @@
+"""Paper Figs. 11-16 — 1D partitioning across thousands of cores.
+
+Per Table-4 matrix (miniature suite) and balancing scheme:
+  * kernel term = max-part work (the paper's "limited by the core with most
+    nnz", Obs. 4/5) measured on-device for the heaviest part;
+  * load  term = broadcast of x to every core over the mesh links (Obs. 8);
+  * merge term = boundary corrections (1D is merge-light).
+
+Derived column reports the end-to-end breakdown —
+reproducing Fig. 15/16's "load dominates 1D" conclusion on TPU constants.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.partition import partition_1d
+from repro.data import paper_large_suite
+from repro.kernels import ref
+
+from .common import HW, header, row, time_call
+
+PARTS = 256  # one single-pod mesh worth of "cores"
+DTYPE_BYTES = 4
+
+
+def _kernel_us_for_heaviest(part, x):
+    """Measure the slowest part's local SpMV (kernel time ~ max over cores)."""
+    nnz = np.asarray(part.nnz)
+    p = int(nnz.argmax())
+    sl = {k: jnp.asarray(np.asarray(getattr(part, k))[p])
+          for k in ("rowind", "colind", "values")}
+    fn = jax.jit(lambda rr, cc, vv, xx: ref.coo_spmv_ref(
+        rr, cc, vv, xx, part.h_pad, nnz=int(nnz[p])))
+    return time_call(fn, sl["rowind"], sl["colind"], sl["values"], x)
+
+
+def run(scale: int = 1, matrices=None):
+    header("fig11-16: 1D partitioning, balancing schemes & breakdown")
+    suite = paper_large_suite(scale)
+    if matrices:
+        suite = [s for s in suite if s.name in matrices]
+    for spec in suite:
+        a = spec.build()
+        rows_, cols = a.shape
+        x = jnp.asarray(np.random.default_rng(1).standard_normal(cols),
+                        jnp.float32)
+        nnz_total = int((a != 0).sum())
+        for balance in ("rows", "nnz-rgrn", "nnz"):
+            part = partition_1d(a, PARTS, fmt="coo", balance=balance)
+            us = _kernel_us_for_heaviest(part, x)
+            nnz = np.asarray(part.nnz)
+            skew = nnz.max() / max(nnz.mean(), 1)
+            # paper Fig. 15 breakdown on TPU constants (per-step seconds)
+            load_s = cols * DTYPE_BYTES / HW.link_bw  # broadcast x (all-gather)
+            kern_s = 2 * nnz.max() / HW.peak_flops
+            merge_s = PARTS * DTYPE_BYTES / HW.link_bw  # boundary ppermute
+            tot = load_s + kern_s + merge_s
+            row(
+                f"fig11.{spec.name}.COO.{balance}",
+                us,
+                f"skew={skew:.2f};load%={100*load_s/tot:.0f};"
+                f"kernel%={100*kern_s/tot:.0f};pad_eff={part.padding_efficiency:.2f}",
+            )
+
+
+def run_scaling(matrix="in-2004", scale: int = 1):
+    """Fig. 16b analogue: 1D load term grows with core count."""
+    header("fig16: 1D scaling with cores (load-bound, Obs. 9)")
+    spec = [s for s in paper_large_suite(scale) if s.name == matrix][0]
+    a = spec.build()
+    cols = a.shape[1]
+    for parts in (64, 256, 1024, 2528):
+        load_s = cols * DTYPE_BYTES / HW.link_bw
+        kern_s = 2 * ((a != 0).sum() / parts) / HW.peak_flops
+        row(f"fig16.{matrix}.parts{parts}", 0.0,
+            f"load_s={load_s:.2e};kernel_s={kern_s:.2e};"
+            f"load_dominates={load_s > kern_s}")

@@ -1,0 +1,86 @@
+"""Paper Figs. 17-24 — 2D partitioning studies.
+
+  * fig17: coarse- vs fine-grained transfer padding (global-max vs per-rank
+    padding of variable tiles) — Obs. 10/14.
+  * fig21: vertical-partition sweep — tile-nnz disparity growth (Obs. 13)
+    vs per-core x-slice shrinkage; the crossover picks the best C.
+  * fig22-24: format comparison within each 2D scheme (CSR vs COO
+    partitionability — Obs. 16).
+"""
+import numpy as np
+
+from repro.core.partition import partition_2d
+from repro.data import paper_large_suite
+
+from .common import HW, header, row
+
+DTYPE_BYTES = 4
+RANK = 64  # transfer-granularity analogue of a 64-DPU UPMEM rank
+
+
+def _padding_bytes(part, granularity: str) -> int:
+    """Bytes moved to retrieve partial outputs, under a padding policy.
+
+    coarse: every core sends max-height over ALL cores (paper RC);
+    fine:   per-rank max (paper RY/BY, rank = 64 cores);
+    exact:  zero padding (the paper's recommended bank-granularity, Obs. 14
+            — on TPU this is what psum_scatter achieves natively).
+    """
+    heights = np.asarray(part.row_extent, np.int64)
+    if granularity == "coarse":
+        per = np.full_like(heights, heights.max())
+    elif granularity == "fine":
+        per = heights.copy()
+        for r0 in range(0, len(heights), RANK):
+            per[r0 : r0 + RANK] = heights[r0 : r0 + RANK].max()
+    else:
+        per = heights
+    return int(per.sum()) * DTYPE_BYTES
+
+
+def run(scale: int = 1, matrices=("web-Google", "ldoor", "com-Youtube", "mc2depi")):
+    header("fig17: transfer padding, coarse vs fine vs exact (Obs. 10/14)")
+    suite = [s for s in paper_large_suite(scale) if s.name in matrices]
+    for spec in suite:
+        a = spec.build()
+        for scheme in ("equally-wide", "variable-sized"):
+            part = partition_2d(a, (32, 8), fmt="coo", scheme=scheme)
+            coarse = _padding_bytes(part, "coarse")
+            fine = _padding_bytes(part, "fine")
+            exact = _padding_bytes(part, "exact")
+            row(
+                f"fig17.{spec.name}.{scheme}",
+                0.0,
+                f"coarse_B={coarse};fine_B={fine};exact_B={exact};"
+                f"fine_speedup={coarse/max(fine,1):.2f}",
+            )
+
+    header("fig21: vertical-partition sweep (Obs. 13)")
+    for spec in suite[:2]:
+        a = spec.build()
+        nnz_total = (a != 0).sum()
+        for C in (1, 2, 4, 8, 16, 32):
+            R = max(1, 256 // C)
+            part = partition_2d(a, (R, C), fmt="coo", scheme="equally-sized")
+            nnz = np.asarray(part.nnz)
+            disparity = nnz.max() / max(nnz.mean(), 1)
+            load_s = (a.shape[1] / C) * DTYPE_BYTES / HW.link_bw
+            kern_s = 2 * nnz.max() / HW.peak_flops
+            merge_s = 2 * (a.shape[0] / R) * DTYPE_BYTES / HW.link_bw
+            row(
+                f"fig21.{spec.name}.C{C}",
+                0.0,
+                f"disparity={disparity:.2f};total_s={load_s+kern_s+merge_s:.2e}",
+            )
+
+    header("fig22-24: format partitionability within 2D schemes (Obs. 16)")
+    for spec in suite[:2]:
+        a = spec.build()
+        for fmt in ("csr", "coo"):
+            part = partition_2d(a, (32, 8), fmt=fmt, scheme="equally-wide")
+            nnz = np.asarray(part.nnz)
+            row(
+                f"fig22.{spec.name}.{fmt.upper()}",
+                0.0,
+                f"max_nnz={nnz.max()};skew={nnz.max()/max(nnz.mean(),1):.2f}",
+            )

@@ -1,0 +1,90 @@
+"""Benchmark harness — one module per paper table/figure family.
+
+    PYTHONPATH=src python -m benchmarks.run [--scale N] [--quick]
+
+Prints ``name,us_per_call,derived`` CSV rows (one block per figure).
+Mapping to the paper:
+  fig9_single_core   Fig. 9/10/31: balancing & formats inside one core
+  fig11_16_1d        Figs. 11-16: 1D schemes, kernel skew, e2e breakdown
+  fig17_24_2d        Figs. 17-24: 2D padding/vertical-partition/format studies
+  fig25_29_compare   Figs. 25-29: 1D-vs-2D winners + fraction-of-peak
+  spmv_distributed   end-to-end distributed SpMV timings (8 fake devices,
+                     subprocess; the LM-side numbers live in §Roofline)
+"""
+import argparse
+import os
+import subprocess
+import sys
+
+
+def _distributed_block():
+    """Run the 8-device distributed SpMV timing in a subprocess."""
+    print("# --- distributed: 1D/2D end-to-end on 8 fake devices")
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import time
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.partition import partition_1d, partition_2d
+from repro.core import distributed as D
+from repro.data import paper_large_suite
+
+AX = (jax.sharding.AxisType.Auto,)
+mesh1 = jax.make_mesh((8,), ("data",), axis_types=AX)
+mesh2 = jax.make_mesh((4, 2), ("data", "model"), axis_types=AX * 2)
+for spec in paper_large_suite(1)[:4] + paper_large_suite(1)[-3:]:
+    a = spec.build()
+    x = np.random.default_rng(0).standard_normal(a.shape[1]).astype(np.float32)
+    part = partition_1d(a, 8, fmt="coo", balance="nnz")
+    arrs = D.place_1d(part, mesh1, "data")
+    xs = jax.device_put(jnp.asarray(x), jax.NamedSharding(mesh1, jax.P("data")))
+    fn = D.spmv_1d(part, mesh1, "data")
+    jax.block_until_ready(fn.jitted(arrs, xs))
+    ts = []
+    for _ in range(5):
+        t0 = time.perf_counter(); jax.block_until_ready(fn.jitted(arrs, xs))
+        ts.append(time.perf_counter() - t0)
+    print(f"dist.{spec.name}.1D.coo.nnz,{np.median(ts)*1e6:.1f},parts=8")
+    part = partition_2d(a, (4, 2), fmt="coo", scheme="equally-sized")
+    arrs = D.place_2d(part, mesh2, ("data", "model"))
+    xs = jax.device_put(jnp.asarray(x), jax.NamedSharding(mesh2, jax.P("model")))
+    fn = D.spmv_2d(part, mesh2, ("data", "model"), merge="psum_scatter")
+    jax.block_until_ready(fn.jitted(arrs, xs))
+    ts = []
+    for _ in range(5):
+        t0 = time.perf_counter(); jax.block_until_ready(fn.jitted(arrs, xs))
+        ts.append(time.perf_counter() - t0)
+    print(f"dist.{spec.name}.2D.equally-sized,{np.median(ts)*1e6:.1f},grid=4x2")
+"""
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=1800)
+    sys.stdout.write(proc.stdout)
+    if proc.returncode != 0:
+        sys.stderr.write(proc.stderr[-2000:])
+        raise SystemExit("distributed benchmark failed")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=1)
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the slower distributed block")
+    args = ap.parse_args()
+
+    from . import fig9_single_core, fig11_16_1d, fig17_24_2d, fig25_29_compare
+
+    print("name,us_per_call,derived")
+    fig9_single_core.run(args.scale)
+    fig11_16_1d.run(args.scale)
+    fig11_16_1d.run_scaling(scale=args.scale)
+    fig17_24_2d.run(args.scale)
+    fig25_29_compare.run(args.scale)
+    if not args.quick:
+        _distributed_block()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Serve a reduced assigned architecture with batched requests.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch qwen1.5-0.5b
+"""
+import argparse
+import time
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.mesh import make_local_mesh
+from repro.launch.serve import Server
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--gen", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    server = Server(cfg, make_local_mesh(), max_len=args.prompt_len + args.gen)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)).astype(np.int32)
+    t0 = time.monotonic()
+    out = server.generate(prompts, args.gen)
+    dt = time.monotonic() - t0
+    print(f"{args.arch}: {out.shape[0]} requests x {out.shape[1]} tokens "
+          f"in {dt:.2f}s ({out.size / dt:.1f} tok/s)")
+    print("first request tokens:", out[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Dry-run analysis: roofline terms from compiled artifacts."""

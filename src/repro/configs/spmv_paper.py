@@ -1,0 +1,38 @@
+"""The paper's own workload config: distributed SpMV over the matrix suites.
+
+Not an LM architecture — this config drives the SpMV-side deliverables:
+benchmarks (benchmarks/*.py iterate its suites exactly as the paper iterates
+its 26 matrices) and the SpMV production-mesh dry-run
+(``python -m repro.launch.dryrun_spmv``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.data import MatrixSpec, paper_large_suite, paper_small_suite
+
+__all__ = ["SpmvPaperConfig", "spmv_paper_config"]
+
+
+@dataclass(frozen=True)
+class SpmvPaperConfig:
+    name: str = "spmv-paper"
+    # evaluation axes, straight from the paper
+    formats: tuple = ("csr", "coo", "bcsr", "bcoo")
+    balance_1d: tuple = ("rows", "nnz-rgrn", "nnz")
+    schemes_2d: tuple = ("equally-sized", "equally-wide", "variable-sized")
+    dtypes: tuple = ("int8", "int32", "bfloat16", "float32")
+    vertical_partitions: tuple = (1, 2, 4, 8, 16, 32)
+    block: tuple = (8, 128)  # TPU-native (paper used 4x4)
+    # mesh points mirroring the paper's DPU sweeps
+    core_counts: tuple = (64, 256, 1024, 2528)
+
+    def small_suite(self, scale: int = 1) -> list[MatrixSpec]:
+        return paper_small_suite(scale)
+
+    def large_suite(self, scale: int = 1) -> list[MatrixSpec]:
+        return paper_large_suite(scale)
+
+
+def spmv_paper_config() -> SpmvPaperConfig:
+    return SpmvPaperConfig()

@@ -1,0 +1,13 @@
+"""SparseP core: compressed formats, partitioning, distributed SpMV.
+
+The paper's primary contribution as a composable JAX library:
+  formats.py      CSR/COO/BCSR/BCOO pytree containers (paper SS2.1.1)
+  stats.py        sparsity statistics + regular/scale-free/block classes (SS4)
+  partition.py    1D + 2D (equally-sized/-wide/variable-sized) partitioners (SS3.2-3.3)
+  spmv.py         single-device SpMV dispatch
+  distributed.py  shard_map execution: 1D broadcast-x, 2D merge-partials (SS3, SS6)
+  adaptive.py     scheme auto-selection from matrix stats (paper Rec. #3)
+"""
+from .formats import BCOO, BCSR, COO, CSR  # noqa: F401
+from .partition import PartitionedMatrix, partition_1d, partition_2d  # noqa: F401
+from .stats import MatrixStats, compute_stats  # noqa: F401

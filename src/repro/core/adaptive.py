@@ -1,0 +1,134 @@
+"""Adaptive scheme selection — paper Recommendation #3 and Observations 15-18.
+
+The paper's central software finding: *there is no one-size-fits-all
+parallelization approach for SpMV on PIM systems* (Obs. 15).  The winning
+(partitioning, format, balancing) tuple depends on the sparsity pattern and
+the hardware.  SparseP itself leaves selection to the user; we implement the
+decision procedure its evaluation implies, as executable rules plus an
+analytic cost model over the roofline constants, so the choice is
+reproducible and testable (tests/test_adaptive.py).
+
+Decision rules distilled from the paper:
+  * scale-free matrix (NNZ-r-std > 25)  -> 1D, element-granular COO balance
+    (Obs. 5/18: perfect nnz balance wins; 2D equally-sized loses to tile
+    disparity).
+  * regular matrix                      -> 2D equally-sized (Obs. 18: better
+    compute/transfer tradeoff), COO over CSR (Obs. 16).
+  * block pattern                       -> blocked format (BCOO) when the
+    multiply is hardware-supported (Obs. 3) — on TPU the MXU always is.
+  * equally-wide / variable-sized       -> only when the hardware supports
+    zero-padding gathers at bank granularity (Obs. 14); on TPU the analogue
+    (psum of scattered global buffers) is strictly worse than equally-sized's
+    aligned psum, so they are never auto-selected — kept for fidelity runs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from .stats import MatrixStats
+
+__all__ = ["Plan", "HardwareModel", "select_scheme", "estimate_time"]
+
+
+@dataclass(frozen=True)
+class HardwareModel:
+    """Per-chip TPU v5e constants (shared with analysis/roofline.py)."""
+
+    chips: int = 256
+    peak_flops: float = 197e12  # bf16 FLOP/s
+    hbm_bw: float = 819e9  # bytes/s
+    link_bw: float = 50e9  # bytes/s per ICI link
+
+    @classmethod
+    def single_pod(cls) -> "HardwareModel":
+        return cls(chips=256)
+
+
+@dataclass(frozen=True)
+class Plan:
+    partitioning: str  # "1d" | "2d"
+    scheme: str  # balance (1d) or tile scheme (2d)
+    fmt: str  # coo | csr | bcoo | bcsr
+    merge: str  # none | ppermute | psum | psum_scatter | global
+    grid: tuple  # (R, C) or (P, 1)
+    reason: str
+
+
+def select_scheme(
+    stats: MatrixStats, hw: HardwareModel, dtype_bytes: int = 4
+) -> Plan:
+    """Pick the paper-implied best scheme for a matrix on given hardware."""
+    chips = hw.chips
+    if stats.is_scale_free:
+        fmt = "bcoo" if stats.is_block_pattern else "coo"
+        return Plan(
+            partitioning="1d",
+            scheme="nnz",
+            fmt=fmt,
+            merge="ppermute",
+            grid=(chips, 1),
+            reason=(
+                "scale-free (NNZ-r-std="
+                f"{stats.nnz_r_std:.1f} > 25): perfect nnz balance beats 2D "
+                "tile disparity (paper Obs. 5/18)"
+            ),
+        )
+    fmt = "bcoo" if stats.is_block_pattern else "coo"
+    # near-square grid, biased toward more row splits (y traffic < x traffic
+    # when rows >= cols, mirroring the paper's vertical-partition sweep).
+    C = _pick_vertical_partitions(stats, chips, dtype_bytes, hw)
+    R = max(1, chips // C)
+    return Plan(
+        partitioning="2d",
+        scheme="equally-sized",
+        fmt=fmt,
+        merge="psum_scatter",
+        grid=(R, C),
+        reason=(
+            f"regular matrix: 2D equally-sized with C={C} vertical partitions "
+            "balances x-load vs partial-merge traffic (paper Obs. 13/18)"
+        ),
+    )
+
+
+def _pick_vertical_partitions(
+    stats: MatrixStats, chips: int, dtype_bytes: int, hw: HardwareModel
+) -> int:
+    """Sweep C over powers of two minimizing the modeled collective time.
+
+    Paper §6.2.1 ('effect of the number of vertical partitions'): more
+    vertical partitions shrink the per-core x slice but multiply the partial
+    results to merge.  Model per-chip bytes: load = cols/C, merge =
+    rows/R * log-ish psum factor; pick argmin.
+    """
+    best_c, best_t = 1, float("inf")
+    c = 1
+    while c <= chips:
+        r = max(1, chips // c)
+        load = stats.cols / c * dtype_bytes
+        merge = stats.rows / r * dtype_bytes * 2.0  # reduce-scatter ~2x slice
+        t = (load + merge) / hw.link_bw
+        if t < best_t:
+            best_c, best_t = c, t
+        c *= 2
+    return best_c
+
+
+def estimate_time(
+    stats: MatrixStats, plan: Plan, hw: HardwareModel, dtype_bytes: int = 4
+) -> dict:
+    """Roofline-style napkin estimate of the paper's four steps (Fig. 4)."""
+    chips = plan.grid[0] * plan.grid[1]
+    flops = 2.0 * stats.nnz / chips
+    kernel_bytes = stats.nnz * (dtype_bytes + 8) / chips  # value + 2 indices
+    if plan.partitioning == "1d":
+        load_bytes = stats.cols * dtype_bytes  # broadcast x (all-gather)
+        merge_bytes = dtype_bytes  # one boundary value
+    else:
+        load_bytes = stats.cols / plan.grid[1] * dtype_bytes
+        merge_bytes = stats.rows / plan.grid[0] * dtype_bytes * 2.0
+    return {
+        "load_s": load_bytes / hw.link_bw,
+        "kernel_s": max(flops / hw.peak_flops, kernel_bytes / hw.hbm_bw),
+        "merge_s": merge_bytes / hw.link_bw,
+    }

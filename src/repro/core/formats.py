@@ -1,0 +1,393 @@
+"""Compressed sparse matrix formats as JAX pytrees.
+
+SparseP supports the four most widely used general compressed formats —
+CSR, COO, BCSR, BCOO (paper §2.1.1, Fig. 2).  Each format here is a frozen
+dataclass registered as a JAX pytree so it can flow through jit/shard_map.
+
+Design notes (TPU adaptation, DESIGN.md §2):
+  * All index arrays are fixed-shape int32 — variable-nnz matrices are stored
+    at a chosen *capacity* with explicit ``nnz`` and padding (value 0, index
+    clamped in-range).  This is the TPU/SPMD analogue of UPMEM's
+    "equal transfer size per bank" constraint, and makes every container
+    shardable and liftable to ShapeDtypeStruct for the dry-run.
+  * BCSR/BCOO block shapes are configurable; TPU-native defaults are
+    MXU/VPU-aligned (8, 128) rather than the paper's 4x4 (DESIGN.md §2,
+    changed-assumption #3).
+  * fp64 is supported in containers and oracles but not in Pallas TPU kernels.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "CSR",
+    "COO",
+    "BCSR",
+    "BCOO",
+    "dense_to_csr",
+    "dense_to_coo",
+    "dense_to_bcsr",
+    "dense_to_bcoo",
+    "csr_to_coo",
+    "coo_to_csr",
+    "to_dense",
+    "SUPPORTED_DTYPES",
+]
+
+# Data types supported by SparseP (paper §3: int8..fp64).  fp64 kept for
+# host-side oracles; TPU kernels accept the rest.
+SUPPORTED_DTYPES = (
+    jnp.int8,
+    jnp.int16,
+    jnp.int32,
+    jnp.int64,
+    jnp.bfloat16,
+    jnp.float32,
+    jnp.float64,
+)
+
+
+def _register(cls, data_fields, meta_fields):
+    """Register a dataclass as a pytree with static metadata fields."""
+    jax.tree_util.register_dataclass(
+        cls, data_fields=list(data_fields), meta_fields=list(meta_fields)
+    )
+    return cls
+
+
+@dataclass(frozen=True)
+class CSR:
+    """Compressed Sparse Row (paper Fig. 2b).
+
+    rowptr[i:i+2] brackets the slice of colind/values for row i.
+    Arrays may be padded beyond ``nnz`` (colind clamped, values zero).
+    """
+
+    rowptr: jax.Array  # (rows + 1,) int32
+    colind: jax.Array  # (capacity,)  int32
+    values: jax.Array  # (capacity,)  dtype
+    shape: Tuple[int, int]  # static (rows, cols)
+
+    @property
+    def rows(self) -> int:
+        return self.shape[0]
+
+    @property
+    def cols(self) -> int:
+        return self.shape[1]
+
+    @property
+    def nnz(self) -> jax.Array:
+        return self.rowptr[-1]
+
+    @property
+    def capacity(self) -> int:
+        return self.values.shape[0]
+
+    @property
+    def dtype(self):
+        return self.values.dtype
+
+
+@dataclass(frozen=True)
+class COO:
+    """Coordinate format (paper Fig. 2c): row-sorted tuples (row, col, value).
+
+    Stored struct-of-arrays (TPU-friendly) rather than array-of-tuples.
+    Row-sortedness is an invariant relied on by the lock-free merge
+    (paper §3.4.2 ``lf``) and is validated in tests.
+    """
+
+    rowind: jax.Array  # (capacity,) int32
+    colind: jax.Array  # (capacity,) int32
+    values: jax.Array  # (capacity,) dtype
+    shape: Tuple[int, int]
+    nnz: jax.Array | int = None  # actual nonzeros (<= capacity)
+
+    def __post_init__(self):
+        if self.nnz is None:
+            object.__setattr__(self, "nnz", self.values.shape[0])
+
+    @property
+    def rows(self) -> int:
+        return self.shape[0]
+
+    @property
+    def cols(self) -> int:
+        return self.shape[1]
+
+    @property
+    def capacity(self) -> int:
+        return self.values.shape[0]
+
+    @property
+    def dtype(self):
+        return self.values.dtype
+
+
+@dataclass(frozen=True)
+class BCSR:
+    """Block Compressed Sparse Row (paper Fig. 2d).
+
+    Nonzero r x c sub-blocks stored densely (zero padded); browptr indexes
+    block rows.  TPU-native default block is (8, 128) — MXU aligned.
+    """
+
+    browptr: jax.Array  # (block_rows + 1,) int32
+    bcolind: jax.Array  # (bcapacity,)      int32 — block-column index
+    bvalues: jax.Array  # (bcapacity, r, c) dtype — dense sub-blocks
+    shape: Tuple[int, int]  # original (rows, cols) — multiples of (r, c)
+    block: Tuple[int, int]  # static (r, c)
+
+    @property
+    def rows(self) -> int:
+        return self.shape[0]
+
+    @property
+    def cols(self) -> int:
+        return self.shape[1]
+
+    @property
+    def block_rows(self) -> int:
+        return self.shape[0] // self.block[0]
+
+    @property
+    def block_cols(self) -> int:
+        return self.shape[1] // self.block[1]
+
+    @property
+    def nblocks(self) -> jax.Array:
+        return self.browptr[-1]
+
+    @property
+    def bcapacity(self) -> int:
+        return self.bvalues.shape[0]
+
+    @property
+    def dtype(self):
+        return self.bvalues.dtype
+
+
+@dataclass(frozen=True)
+class BCOO:
+    """Block Coordinate format (paper Fig. 2e): block-row-sorted block tuples."""
+
+    browind: jax.Array  # (bcapacity,) int32
+    bcolind: jax.Array  # (bcapacity,) int32
+    bvalues: jax.Array  # (bcapacity, r, c) dtype
+    shape: Tuple[int, int]
+    block: Tuple[int, int]
+    nblocks: jax.Array | int = None
+
+    def __post_init__(self):
+        if self.nblocks is None:
+            object.__setattr__(self, "nblocks", self.bvalues.shape[0])
+
+    @property
+    def rows(self) -> int:
+        return self.shape[0]
+
+    @property
+    def cols(self) -> int:
+        return self.shape[1]
+
+    @property
+    def block_rows(self) -> int:
+        return self.shape[0] // self.block[0]
+
+    @property
+    def block_cols(self) -> int:
+        return self.shape[1] // self.block[1]
+
+    @property
+    def bcapacity(self) -> int:
+        return self.bvalues.shape[0]
+
+    @property
+    def dtype(self):
+        return self.bvalues.dtype
+
+
+_register(CSR, ["rowptr", "colind", "values"], ["shape"])
+_register(COO, ["rowind", "colind", "values", "nnz"], ["shape"])
+_register(BCSR, ["browptr", "bcolind", "bvalues"], ["shape", "block"])
+_register(BCOO, ["browind", "bcolind", "bvalues", "nblocks"], ["shape", "block"])
+
+
+# ---------------------------------------------------------------------------
+# Host-side constructors (numpy).  Matrix construction happens on the host
+# (the paper loads matrices on the host CPU and DMA-copies them to MRAM banks;
+# we build on host and device_put with a sharding).
+# ---------------------------------------------------------------------------
+
+
+def _pad_to(arr: np.ndarray, capacity: int, fill=0) -> np.ndarray:
+    if arr.shape[0] >= capacity:
+        return arr[:capacity]
+    pad_shape = (capacity - arr.shape[0],) + arr.shape[1:]
+    return np.concatenate([arr, np.full(pad_shape, fill, dtype=arr.dtype)])
+
+
+def dense_to_csr(a: np.ndarray, capacity: int | None = None) -> CSR:
+    a = np.asarray(a)
+    rows, cols = a.shape
+    rowind, colind = np.nonzero(a)
+    order = np.lexsort((colind, rowind))
+    rowind, colind = rowind[order], colind[order]
+    values = a[rowind, colind]
+    rowptr = np.zeros(rows + 1, dtype=np.int32)
+    np.add.at(rowptr, rowind + 1, 1)
+    rowptr = np.cumsum(rowptr).astype(np.int32)
+    capacity = capacity or max(1, len(values))
+    assert capacity >= len(values), "capacity below nnz"
+    return CSR(
+        rowptr=jnp.asarray(rowptr),
+        colind=jnp.asarray(_pad_to(colind.astype(np.int32), capacity)),
+        values=jnp.asarray(_pad_to(values, capacity)),
+        shape=(rows, cols),
+    )
+
+
+def dense_to_coo(a: np.ndarray, capacity: int | None = None) -> COO:
+    a = np.asarray(a)
+    rows, cols = a.shape
+    rowind, colind = np.nonzero(a)
+    order = np.lexsort((colind, rowind))  # row-sorted (paper §3.2 invariant)
+    rowind, colind = rowind[order], colind[order]
+    values = a[rowind, colind]
+    nnz = len(values)
+    capacity = capacity or max(1, nnz)
+    assert capacity >= nnz, "capacity below nnz"
+    # Padding rows point at the last row so padded (zero) contributions land
+    # harmlessly (they add 0 to a real output slot).
+    pad_row = rows - 1 if rows else 0
+    return COO(
+        rowind=jnp.asarray(_pad_to(rowind.astype(np.int32), capacity, pad_row)),
+        colind=jnp.asarray(_pad_to(colind.astype(np.int32), capacity)),
+        values=jnp.asarray(_pad_to(values, capacity)),
+        shape=(rows, cols),
+        nnz=nnz,
+    )
+
+
+def _blockize(a: np.ndarray, block: Tuple[int, int]):
+    """Return (browind, bcolind, bvalues) for nonzero blocks, block-row sorted."""
+    r, c = block
+    rows, cols = a.shape
+    assert rows % r == 0 and cols % c == 0, f"{a.shape} not divisible by {block}"
+    br, bc = rows // r, cols // c
+    tiles = a.reshape(br, r, bc, c).transpose(0, 2, 1, 3)  # (br, bc, r, c)
+    mask = np.abs(tiles).sum(axis=(2, 3)) != 0
+    browind, bcolind = np.nonzero(mask)
+    bvalues = tiles[browind, bcolind]
+    return browind.astype(np.int32), bcolind.astype(np.int32), bvalues
+
+
+def dense_to_bcsr(
+    a: np.ndarray, block: Tuple[int, int] = (8, 128), capacity: int | None = None
+) -> BCSR:
+    a = np.asarray(a)
+    browind, bcolind, bvalues = _blockize(a, block)
+    br = a.shape[0] // block[0]
+    browptr = np.zeros(br + 1, dtype=np.int32)
+    np.add.at(browptr, browind + 1, 1)
+    browptr = np.cumsum(browptr).astype(np.int32)
+    nb = len(bcolind)
+    capacity = capacity or max(1, nb)
+    assert capacity >= nb
+    return BCSR(
+        browptr=jnp.asarray(browptr),
+        bcolind=jnp.asarray(_pad_to(bcolind, capacity)),
+        bvalues=jnp.asarray(
+            _pad_to(bvalues if nb else np.zeros((0,) + block, a.dtype), capacity)
+        ),
+        shape=a.shape,
+        block=block,
+    )
+
+
+def dense_to_bcoo(
+    a: np.ndarray, block: Tuple[int, int] = (8, 128), capacity: int | None = None
+) -> BCOO:
+    a = np.asarray(a)
+    browind, bcolind, bvalues = _blockize(a, block)
+    nb = len(bcolind)
+    capacity = capacity or max(1, nb)
+    assert capacity >= nb
+    pad_row = a.shape[0] // block[0] - 1 if a.shape[0] else 0
+    return BCOO(
+        browind=jnp.asarray(_pad_to(browind, capacity, pad_row)),
+        bcolind=jnp.asarray(_pad_to(bcolind, capacity)),
+        bvalues=jnp.asarray(
+            _pad_to(bvalues if nb else np.zeros((0,) + block, a.dtype), capacity)
+        ),
+        shape=a.shape,
+        block=block,
+        nblocks=nb,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Conversions (jax-traceable where shapes allow)
+# ---------------------------------------------------------------------------
+
+
+def csr_to_coo(m: CSR) -> COO:
+    """Expand rowptr to explicit row indices (jax-traceable)."""
+    # rowind[k] = (number of rowptr entries <= k) - 1
+    k = jnp.arange(m.capacity, dtype=jnp.int32)
+    rowind = jnp.searchsorted(m.rowptr, k, side="right").astype(jnp.int32) - 1
+    rowind = jnp.clip(rowind, 0, m.rows - 1)
+    return COO(
+        rowind=rowind,
+        colind=m.colind,
+        values=m.values,
+        shape=m.shape,
+        nnz=m.nnz,
+    )
+
+
+def coo_to_csr(m: COO) -> CSR:
+    """Counting-sort rows to rowptr; requires row-sorted input (validated in tests)."""
+    counts = jnp.zeros(m.rows + 1, dtype=jnp.int32)
+    valid = jnp.arange(m.capacity) < m.nnz
+    counts = counts.at[jnp.where(valid, m.rowind + 1, 0)].add(
+        valid.astype(jnp.int32)
+    )
+    rowptr = jnp.cumsum(counts).astype(jnp.int32)
+    return CSR(rowptr=rowptr, colind=m.colind, values=m.values, shape=m.shape)
+
+
+def to_dense(m) -> jax.Array:
+    """Densify any format (oracle path; used only in tests/examples)."""
+    if isinstance(m, CSR):
+        m = csr_to_coo(m)
+    if isinstance(m, COO):
+        valid = jnp.arange(m.capacity) < m.nnz
+        vals = jnp.where(valid, m.values, 0)
+        out = jnp.zeros(m.shape, m.dtype)
+        return out.at[m.rowind, m.colind].add(vals)
+    if isinstance(m, (BCSR, BCOO)):
+        r, c = m.block
+        if isinstance(m, BCSR):
+            k = jnp.arange(m.bcapacity, dtype=jnp.int32)
+            browind = (
+                jnp.searchsorted(m.browptr, k, side="right").astype(jnp.int32) - 1
+            )
+            browind = jnp.clip(browind, 0, m.block_rows - 1)
+            nblocks = m.nblocks
+        else:
+            browind, nblocks = m.browind, m.nblocks
+        valid = (jnp.arange(m.bcapacity) < nblocks)[:, None, None]
+        bv = jnp.where(valid, m.bvalues, 0)
+        out = jnp.zeros((m.block_rows, m.block_cols, r, c), m.dtype)
+        out = out.at[browind, m.bcolind].add(bv)
+        return out.transpose(0, 2, 1, 3).reshape(m.shape)
+    raise TypeError(f"unknown format {type(m)}")

@@ -1,0 +1,11 @@
+"""Single-device SpMV dispatch (container-level public API).
+
+Thin facade over kernels/ops.py so `repro.core` is self-contained for users:
+
+    from repro.core import spmv
+    y = spmv.spmv(matrix, x)                 # XLA path, any backend
+    y = spmv.spmv(matrix, x, impl="pallas")  # TPU kernels (interpret on CPU)
+"""
+from repro.kernels.ops import spmv  # noqa: F401
+
+__all__ = ["spmv"]

@@ -1,0 +1,194 @@
+"""Pallas TPU kernel: element-granular COO SpMV/SpMM via windowed MXU merge.
+
+TPU adaptation of SparseP's COO kernels with the lock-free (``lf``)
+synchronization scheme (paper §3.4.2, Obs. 6).  On UPMEM, ``lf`` has each
+tasklet accumulate partial results for its nnz range in WRAM and one thread
+merge them.  On TPU there are no mutexes to choose from — the TPU-native
+lock-free merge is a **one-hot matmul on the MXU**:
+
+  * host side: the row-sorted nnz stream is cut into *chunks* of at most E
+    elements, each chunk confined to one output *window* of SPAN rows
+    (window w covers rows [w*SPAN, (w+1)*SPAN)).  Chunk -> window ids are
+    scalar-prefetched; consecutive chunks of one window revisit its output
+    block and accumulate (zero-init on first visit, like the block kernel);
+  * kernel step: gather x[colind] for the chunk (VMEM gather), multiply by
+    values, then merge with ``one_hot(rel_row, SPAN).T @ products`` —
+    an (SPAN, E) x (E, B) MXU issue.  The segment reduction that UPMEM does
+    with WRAM scratch + a merge thread runs on the systolic array instead;
+  * the x tile is kept VMEM-resident (local tile widths from the 1D/2D
+    partitioners are VMEM-sized — the WRAM analogue).
+
+Element-granular chunking gives the perfect nnz balance of ``COO.nnz``
+(paper Obs. 5); the row-granular variant used for CSR semantics only moves
+the host-side chunk boundaries (kernels/csr_spmv.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["coo_spmv_pallas", "plan_chunks", "ChunkPlan", "CHUNK_E", "ROW_SPAN"]
+
+CHUNK_E = 512  # nnz per grid step (paper: 256-byte WRAM fetches; here VMEM-sized)
+ROW_SPAN = 512  # output window height (multiple of 8 sublanes)
+
+
+def _acc_dtype(dtype):
+    if dtype in (jnp.bfloat16, jnp.float16):
+        return jnp.float32
+    if dtype in (jnp.int8, jnp.int16):
+        return jnp.int32
+    return dtype
+
+
+@dataclass(frozen=True)
+class ChunkPlan:
+    """Host-side chunking of a row-sorted COO stream (static per matrix)."""
+
+    rowind: np.ndarray  # (n_chunks, E) int32 — rows, relative to window start
+    colind: np.ndarray  # (n_chunks, E) int32
+    values: np.ndarray  # (n_chunks, E)
+    window: np.ndarray  # (n_chunks,)  int32 — output window id per chunk
+    count: np.ndarray  # (n_chunks,)  int32 — real elements per chunk
+    n_windows: int
+    out_rows: int
+    span: int = ROW_SPAN  # window height the plan was built with
+
+
+def plan_chunks(
+    rowind: np.ndarray,
+    colind: np.ndarray,
+    values: np.ndarray,
+    out_rows: int,
+    chunk: int = CHUNK_E,
+    span: int = ROW_SPAN,
+    row_granular: bool = False,
+) -> ChunkPlan:
+    """Cut a row-sorted COO stream into window-confined chunks.
+
+    row_granular=True keeps whole rows inside one chunk where possible
+    (CSR.row / *.nnz-rgrn semantics); False splits anywhere (COO.nnz perfect
+    balance).  Rows longer than ``chunk`` split regardless (a row longer than
+    a chunk is the paper's "one very dense row" case, Obs. 4).
+    """
+    rowind = np.asarray(rowind, np.int64)
+    colind = np.asarray(colind, np.int64)
+    values = np.asarray(values)
+    nnz = len(rowind)
+    n_windows = max(1, -(-out_rows // span))
+
+    # chunk boundaries: never cross a window boundary; at most `chunk` long.
+    bounds = [0]
+    while bounds[-1] < nnz:
+        lo = bounds[-1]
+        w = rowind[lo] // span
+        # furthest element still inside window w
+        hi_win = int(np.searchsorted(rowind, (w + 1) * span, side="left"))
+        hi = min(lo + chunk, hi_win)
+        if row_granular and hi < hi_win:
+            # retreat to a row boundary (keep rows whole) unless that empties
+            # the chunk (row longer than `chunk`)
+            r_hi = rowind[hi]
+            back = int(np.searchsorted(rowind, r_hi, side="left"))
+            if back > lo:
+                hi = back
+        bounds.append(hi)
+    bounds = np.asarray(bounds, np.int64)
+    n_chunks = len(bounds) - 1
+
+    ri = np.zeros((n_chunks, chunk), np.int32)
+    ci = np.zeros((n_chunks, chunk), np.int32)
+    vv = np.zeros((n_chunks, chunk), values.dtype)
+    win = np.zeros(n_chunks, np.int32)
+    cnt = np.zeros(n_chunks, np.int32)
+    for j in range(n_chunks):
+        lo, hi = int(bounds[j]), int(bounds[j + 1])
+        w = int(rowind[lo] // span) if hi > lo else 0
+        win[j] = w
+        cnt[j] = hi - lo
+        ri[j, : hi - lo] = rowind[lo:hi] - w * span  # window-relative
+        ci[j, : hi - lo] = colind[lo:hi]
+        vv[j, : hi - lo] = values[lo:hi]
+    # Keep window ids non-decreasing even for empty plans.
+    return ChunkPlan(ri, ci, vv, win, cnt, n_windows, out_rows, span)
+
+
+def _kernel(win_ref, cnt_ref, ri_ref, ci_ref, val_ref, x_ref, y_ref):
+    """One grid step = one chunk of <=E elements in one SPAN-row window."""
+    j = pl.program_id(0)
+    first = (j == 0) | (win_ref[j] != win_ref[jnp.maximum(j - 1, 0)])
+
+    @pl.when(first)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    E = ri_ref.shape[-1]
+    acc = y_ref.dtype
+    rel = ri_ref[0]  # (E,) window-relative rows
+    cix = ci_ref[0]  # (E,)
+    vals = val_ref[0].astype(acc)  # (E,)
+    mask = jnp.arange(E, dtype=jnp.int32) < cnt_ref[j]
+
+    xv = jnp.take(x_ref[...], cix, axis=0, mode="clip").astype(acc)  # (E, B)
+    prod = jnp.where(mask[:, None], vals[:, None] * xv, 0)  # (E, B)
+    span = y_ref.shape[0]
+    # Lock-free merge on the MXU: scatter rel-rows as a one-hot matmul.
+    onehot = (rel[:, None] == jnp.arange(span, dtype=jnp.int32)[None, :]).astype(acc)
+    y_ref[...] += jnp.dot(onehot.T, prod, preferred_element_type=acc)
+
+
+def coo_spmv_pallas(
+    plan: ChunkPlan,
+    x: jax.Array,
+    interpret: bool = True,
+) -> jax.Array:
+    """Run the windowed COO kernel for a host-side ChunkPlan.
+
+    x: (cols,) or (cols, B).  Returns y (out_rows[, B]) in accumulation dtype.
+    """
+    squeeze = x.ndim == 1
+    xm = x[:, None] if squeeze else x
+    B = xm.shape[1]
+    n_chunks, E = plan.rowind.shape
+    span = plan.span
+    out_pad = plan.n_windows * span
+    acc = _acc_dtype(plan.values.dtype)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_chunks,),
+        in_specs=[
+            pl.BlockSpec((1, E), lambda j, w, c: (j, 0)),  # rowind chunk
+            pl.BlockSpec((1, E), lambda j, w, c: (j, 0)),  # colind chunk
+            pl.BlockSpec((1, E), lambda j, w, c: (j, 0)),  # values chunk
+            pl.BlockSpec(xm.shape, lambda j, w, c: (0, 0)),  # x resident
+        ],
+        out_specs=pl.BlockSpec((span, B), lambda j, w, c: (w[j], 0)),
+    )
+    y = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((out_pad, B), acc),
+        interpret=interpret,
+    )(
+        jnp.asarray(plan.window),
+        jnp.asarray(plan.count),
+        jnp.asarray(plan.rowind),
+        jnp.asarray(plan.colind),
+        jnp.asarray(plan.values),
+        xm,
+    )
+    # Windows with no chunks are never initialized: mask them.
+    touched = (
+        jnp.zeros((plan.n_windows,), jnp.bool_)
+        .at[jnp.asarray(plan.window)]
+        .set(jnp.asarray(plan.count) > 0, mode="drop")
+    )
+    y = jnp.where(jnp.repeat(touched, span)[:, None], y, 0)
+    y = y[: plan.out_rows]
+    return y[:, 0] if squeeze else y

@@ -1,0 +1,116 @@
+"""Public jit'd SpMV entry points and format dispatch.
+
+Two implementations per format:
+  * ``impl="xla"``    — the pure-jnp oracle path (kernels/ref.py).  Lowers on
+    every backend; used inside shard_map for the multi-pod dry-run and as the
+    CPU production path.
+  * ``impl="pallas"`` — the TPU kernels (interpret=True on CPU for
+    validation; compiled on real TPUs).
+
+`spmv` takes the container formats from core/formats.py; `spmv_local_coo`
+is the flat-argument variant the distributed layer calls per shard.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import formats as F
+from . import ref
+from .bcsr_spmv import bcoo_spmv_pallas
+from .coo_spmv import coo_spmv_pallas, plan_chunks
+from .csr_spmv import csr_plan_chunks, csr_spmv_pallas
+from .ell_spmv import ell_spmv_pallas
+
+__all__ = ["spmv", "spmv_local_coo", "spmv_local_block"]
+
+
+def spmv(m, x: jax.Array, impl: str = "xla", interpret: bool = True) -> jax.Array:
+    """y = m @ x for any SparseP container format (single device).
+
+    For ``impl="pallas"`` on the scalar formats the (static) chunk plan is
+    built host-side from concrete index arrays — matrices are preprocessing
+    artifacts (paper §3.1 excludes matrix load/plan time), so `m` must hold
+    concrete arrays in that mode.
+    """
+    if impl == "xla":
+        if isinstance(m, F.CSR):
+            return ref.csr_spmv_ref(m.rowptr, m.colind, m.values, x, m.rows)
+        if isinstance(m, F.COO):
+            return ref.coo_spmv_ref(m.rowind, m.colind, m.values, x, m.rows, m.nnz)
+        if isinstance(m, F.BCSR):
+            return ref.bcsr_spmv_ref(m.browptr, m.bcolind, m.bvalues, x, m.rows)
+        if isinstance(m, F.BCOO):
+            return ref.bcoo_spmv_ref(
+                m.browind, m.bcolind, m.bvalues, x, m.rows, m.nblocks
+            )
+        raise TypeError(type(m))
+    if impl == "pallas":
+        import numpy as np
+
+        if isinstance(m, F.CSR):
+            plan = csr_plan_chunks(
+                np.asarray(m.rowptr), np.asarray(m.colind), np.asarray(m.values),
+                m.rows,
+            )
+            return csr_spmv_pallas(plan, x, interpret=interpret)
+        if isinstance(m, F.COO):
+            nnz = int(m.nnz)
+            plan = plan_chunks(
+                np.asarray(m.rowind)[:nnz],
+                np.asarray(m.colind)[:nnz],
+                np.asarray(m.values)[:nnz],
+                m.rows,
+            )
+            return coo_spmv_pallas(plan, x, interpret=interpret)
+        if isinstance(m, F.BCSR):
+            coo = _bcsr_to_bcoo_indices(m)
+            return bcoo_spmv_pallas(
+                coo, m.bcolind, m.bvalues, x, m.rows, m.nblocks, interpret=interpret
+            )
+        if isinstance(m, F.BCOO):
+            return bcoo_spmv_pallas(
+                m.browind, m.bcolind, m.bvalues, x, m.rows, m.nblocks,
+                interpret=interpret,
+            )
+        raise TypeError(type(m))
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def _bcsr_to_bcoo_indices(m: F.BCSR) -> jax.Array:
+    k = jnp.arange(m.bcapacity, dtype=jnp.int32)
+    browind = jnp.searchsorted(m.browptr, k, side="right").astype(jnp.int32) - 1
+    return jnp.clip(browind, 0, m.block_rows - 1)
+
+
+# ---------------------------------------------------------------------------
+# Flat per-shard entry points (called inside shard_map by core/distributed.py)
+# ---------------------------------------------------------------------------
+
+
+def spmv_local_coo(
+    rowind: jax.Array,
+    colind: jax.Array,
+    values: jax.Array,
+    nnz: jax.Array,
+    x_local: jax.Array,
+    out_rows: int,
+) -> jax.Array:
+    """Local tile SpMV in COO normal form (XLA path; shard-safe)."""
+    return ref.coo_spmv_ref(rowind, colind, values, x_local, out_rows, nnz=nnz)
+
+
+def spmv_local_block(
+    browind: jax.Array,
+    bcolind: jax.Array,
+    bvalues: jax.Array,
+    nblocks: jax.Array,
+    x_local: jax.Array,
+    out_rows: int,
+) -> jax.Array:
+    """Local tile SpMV in blocked normal form (XLA path; shard-safe)."""
+    return ref.bcoo_spmv_ref(
+        browind, bcolind, bvalues, x_local, out_rows, nblocks=nblocks
+    )

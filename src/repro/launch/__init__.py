@@ -1,0 +1,1 @@
+"""Launchers: mesh definitions, train/serve drivers, multi-pod dry-run."""

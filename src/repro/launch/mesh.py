@@ -1,0 +1,38 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state — required by the
+dry-run protocol (the XLA_FLAGS fake-device count must be set before any jax
+initialization; see launch/dryrun.py lines 1-2).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh", "MODEL_PARALLEL"]
+
+# Fixed by per-chip HBM at the assigned model sizes (DESIGN.md §5).
+MODEL_PARALLEL = 16
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single-pod 16x16 (256 chips) or 2-pod 2x16x16 (512 chips) mesh.
+
+    Axes: ``pod`` — pure data parallel across pods (slow inter-pod links);
+    ``data`` — batch/FSDP; ``model`` — tensor/expert/sequence parallel.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_local_mesh(model_parallel: int = 1):
+    """Whatever this host has (tests, examples, CPU smoke runs)."""
+    n = len(jax.devices())
+    mp = max(1, min(model_parallel, n))
+    return jax.make_mesh(
+        (n // mp, mp), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

@@ -1,0 +1,250 @@
+"""Step builders + input specs for train / prefill / decode.
+
+This is the single source of truth that launch/train.py, launch/serve.py,
+launch/dryrun.py and the benchmarks all share:
+
+  * make_train_step(cfg, opt_cfg)  -> f(params, opt, batch) -> (params, opt, metrics)
+  * make_prefill_step(cfg, shape)  -> f(params, batch) -> (logits, caches)
+  * make_decode_step(cfg, shape)   -> f(params, caches, token[, memory]) -> (logits, caches)
+  * input_specs(cfg, shape_name)   -> ShapeDtypeStruct stand-ins for every
+    model input (weak-type-correct, shardable, no allocation) — the dry-run
+    contract (system prompt MULTI-POD DRY-RUN item 2).
+  * sharding spec trees for params / opt / batch / caches.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import SHAPES, ArchConfig
+from repro.models import attention as A
+from repro.models import linear_attn as LA
+from repro.models import lm
+from repro.optim import AdamWConfig, OptState, apply_updates, init_opt, opt_specs
+
+__all__ = [
+    "make_train_step",
+    "make_prefill_step",
+    "make_decode_step",
+    "input_specs",
+    "batch_spec",
+    "cache_specs",
+    "abstract_state",
+]
+
+BATCH_AXES = ("pod", "data")
+
+
+def batch_spec(*trailing):
+    return P(BATCH_AXES, *trailing)
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape_name: str) -> dict:
+    """Model inputs for one (arch x shape) cell.
+
+    train:    {tokens, labels[, prefix_embeds][, frames]}
+    prefill:  same minus labels
+    decode:   {token, caches[, memory]}  — one new token against a seq_len KV
+    """
+    sh = SHAPES[shape_name]
+    S, B, kind = sh["seq_len"], sh["global_batch"], sh["kind"]
+    d = cfg.d_model
+    if kind in ("train", "prefill"):
+        S_text = S - cfg.modality_tokens
+        out = {"tokens": _sds((B, S_text), jnp.int32)}
+        if kind == "train":
+            out["labels"] = _sds((B, S_text), jnp.int32)
+        if cfg.modality_tokens:
+            out["prefix_embeds"] = _sds((B, cfg.modality_tokens, d), jnp.bfloat16)
+        if cfg.encoder_layers:
+            out["frames"] = _sds((B, S, d), jnp.bfloat16)
+        return out
+    # decode: one token + caches at seq_len capacity
+    caches = jax.eval_shape(lambda: lm.init_caches(cfg, B, S))
+    out = {"token": _sds((B, 1), jnp.int32), "caches": caches}
+    if cfg.encoder_layers:
+        out["memory"] = _sds((B, min(S, 4096), d), jnp.bfloat16)
+    return out
+
+
+def input_spec_shardings(cfg: ArchConfig, shape_name: str) -> dict:
+    """PartitionSpec tree matching input_specs."""
+    sh = SHAPES[shape_name]
+    kind = sh["kind"]
+    if kind in ("train", "prefill"):
+        out = {"tokens": batch_spec(None)}
+        if kind == "train":
+            out["labels"] = batch_spec(None)
+        if cfg.modality_tokens:
+            out["prefix_embeds"] = batch_spec(None, None)
+        if cfg.encoder_layers:
+            out["frames"] = batch_spec(None, None)
+        return out
+    out = {"token": batch_spec(None), "caches": cache_specs(cfg)}
+    if cfg.encoder_layers:
+        out["memory"] = batch_spec(None, None)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cache sharding specs (decode): KV sequence-sharded over "model",
+# recurrent-state key dim over "model" — divisible for every assigned arch.
+# ---------------------------------------------------------------------------
+
+
+def _cache_spec_one(cfg, kind, stacked: bool):
+    lead = (None,) if stacked else ()
+    if kind in ("attn", "attn_local", "attn_global", "moe", "shared_attn",
+                "cross_attn"):
+        kv = P(*lead, BATCH_AXES, "model", None, None)  # (B, S, H, dh)
+        return A.KVCache(kv, kv, P(*lead))
+    if kind in ("mla_dense", "mla_moe"):
+        lat = P(*lead, BATCH_AXES, "model", None)  # (B, S, dc)
+        return A.MLACache(lat, lat, P(*lead))
+    if kind in ("mamba", "mlstm"):
+        return LA.RecurrentState(
+            P(*lead, BATCH_AXES, None, "model", None),  # (B, H, dk, dv)
+            P(*lead, BATCH_AXES, None, "model"),
+        )
+    if kind == "slstm":
+        s = P(*lead, BATCH_AXES, None, "model")  # (B, H, dh)
+        return LA.SLSTMState(s, s, s, s)
+    raise ValueError(kind)
+
+
+def cache_specs(cfg: ArchConfig):
+    prefix = tuple(_cache_spec_one(cfg, k, False) for k in cfg.prefix_pattern)
+    blocks = {
+        f"b{j}": _cache_spec_one(cfg, k, True)
+        for j, k in enumerate(cfg.block_pattern)
+    }
+    return lm.Caches(prefix=prefix, blocks=blocks)
+
+
+# ---------------------------------------------------------------------------
+# abstract train state (params + optimizer) for the dry run
+# ---------------------------------------------------------------------------
+
+
+def abstract_state(cfg: ArchConfig, opt_cfg: AdamWConfig):
+    params = lm.abstract_params(cfg)
+    opt = jax.eval_shape(lambda: init_opt(params, opt_cfg))
+    return params, opt
+
+
+def state_specs(cfg: ArchConfig, opt_cfg: AdamWConfig):
+    ps = lm.param_specs(cfg)
+    return ps, opt_specs(ps, opt_cfg)
+
+
+# ---------------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------------
+
+
+def _value_and_grad_trainable(loss_fn):
+    """value_and_grad over the inexact (float) leaves only.
+
+    Integer leaves (the BCOO index arrays of SparsePLinear weights) are
+    structural, not trainable: they are held fixed and receive zero
+    gradients so the optimizer tree stays congruent.
+    """
+
+    def wrapped(params, *args):
+        flat, tdef = jax.tree.flatten(params)
+        is_f = [jnp.issubdtype(x.dtype, jnp.inexact) for x in flat]
+        train = [x for x, f in zip(flat, is_f) if f]
+
+        def from_train(train_leaves):
+            it = iter(train_leaves)
+            merged = [next(it) if f else x for x, f in zip(flat, is_f)]
+            return loss_fn(tdef.unflatten(merged), *args)
+
+        loss, g_train = jax.value_and_grad(from_train)(train)
+        it = iter(g_train)
+        g_flat = [next(it) if f else jnp.zeros_like(x)
+                  for x, f in zip(flat, is_f)]
+        return loss, tdef.unflatten(g_flat)
+
+    return wrapped
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig,
+                    microbatches: int = 1):
+    """Train step with optional gradient-accumulation microbatching.
+
+    Microbatching bounds the MoE dispatch-buffer working set (tokens * top_k
+    slots in HBM) — required to fit deepseek-v3 train_4k on the single-pod
+    mesh (DESIGN.md §5).  Gradients accumulate in bf16 (param dtype) over a
+    lax.scan; the optimizer update runs once on the mean.
+    """
+    vag = _value_and_grad_trainable(lm.loss_fn)
+
+    def train_step(params, opt: OptState, batch):
+        if microbatches == 1:
+            loss, grads = vag(params, batch, cfg)
+        else:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches)
+                                 + x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+
+            def one(carry, b):
+                loss_acc, g_acc = carry
+                loss_i, g_i = vag(params, b, cfg)
+                g_acc = jax.tree.map(lambda a, g: a + g.astype(a.dtype),
+                                     g_acc, g_i)
+                return (loss_acc + loss_i, g_acc), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params)
+            (loss, grads), _ = jax.lax.scan(one, (jnp.zeros(()), g0), mb)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        params, opt, metrics = apply_updates(params, grads, opt, opt_cfg)
+        metrics["loss"] = loss
+        return params, opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, shape_name: str):
+    S = SHAPES[shape_name]["seq_len"]
+
+    def prefill_step(params, batch):
+        memory = None
+        if cfg.encoder_layers:
+            memory = lm.encode(params, batch["frames"], cfg)
+        return lm.prefill(
+            params,
+            batch["tokens"],
+            cfg,
+            max_len=S,
+            prefix_embeds=batch.get("prefix_embeds"),
+            memory=memory,
+        )
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, shape_name: str):
+    def decode_step(params, batch):
+        return lm.decode_step(
+            params, batch["token"], batch["caches"], cfg,
+            memory=batch.get("memory"),
+        )
+
+    return decode_step

@@ -1,0 +1,10 @@
+"""Assigned model architectures (pure JAX, scan-over-layers, config-driven).
+
+  common.py       norms, embeddings, RoPE, MLPs, sharding helpers
+  attention.py    GQA / MLA / cross-attention (+ decode paths)
+  linear_attn.py  chunked GLA primitive; Mamba2, mLSTM, sLSTM blocks
+  moe.py          MoE with SparseP COO dispatch (mixtral / deepseek routers)
+  blocks.py       per-kind block bundles
+  lm.py           full assembly: init/specs/forward/loss/prefill/decode
+"""
+from . import lm  # noqa: F401

@@ -1,0 +1,341 @@
+"""Attention variants: GQA (RoPE, optional bias/softcap/sliding-window),
+MLA (DeepSeek-V3 latent attention), and cross-attention for the enc-dec arch.
+
+Both a full-sequence path (train / prefill) and a single-token decode path
+against a KV cache are provided.  The decode path is written so the KV cache
+may be sharded over heads *or* sequence (long-context) — reductions over the
+key dimension are plain jnp sums, which GSPMD partitions across the sharded
+axis (the softmax normalizer becomes a partial-reduce + all-reduce).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import (
+    batch_axes,
+    dense_bias_init,
+    dense_init,
+    dense_spec,
+    dense_apply,
+    rope,
+    shard,
+    softcap,
+)
+
+__all__ = ["gqa_init", "gqa_spec", "gqa_apply", "gqa_decode", "mla_init",
+           "mla_spec", "mla_apply", "mla_decode", "KVCache"]
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, S, n_kv, dh)
+    v: jax.Array  # (B, S, n_kv, dh)
+    length: jax.Array  # () int32 — tokens already in cache
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+
+def gqa_init(key, cfg, dtype=jnp.bfloat16):
+    """cfg needs: d_model, n_heads, n_kv_heads, head_dim, qkv_bias."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dh, H, KV = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    mk = dense_bias_init if cfg.qkv_bias else dense_init
+    return {
+        "wq": mk(k1, cfg.d_model, H * dh, dtype),
+        "wk": mk(k2, cfg.d_model, KV * dh, dtype),
+        "wv": mk(k3, cfg.d_model, KV * dh, dtype),
+        "wo": dense_init(k4, H * dh, cfg.d_model, dtype),
+    }
+
+
+def gqa_spec(cfg) -> dict:
+    sp = {
+        "wq": dense_spec("col"),
+        "wk": dense_spec("col"),
+        "wv": dense_spec("col"),
+        "wo": dense_spec("row"),
+    }
+    if cfg.qkv_bias:
+        for k in ("wq", "wk", "wv"):
+            sp[k] = dict(sp[k], b=P("model"))
+    return sp
+
+
+def _split_heads(x, n, dh):
+    return x.reshape(x.shape[:-1] + (n, dh))
+
+
+def _sdpa(q, k, v, mask, cap=None, scale=None):
+    """q: (B, Sq, H, dh); k/v: (B, Sk, KV, dh) with H % KV == 0."""
+    B, Sq, H, dh = q.shape
+    KV = k.shape[2]
+    g = H // KV
+    qf = q.astype(jnp.float32) * (scale if scale is not None else 1.0 / math.sqrt(dh))
+    qg = qf.reshape(B, Sq, KV, g, dh)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32))
+    logits = softcap(logits, cap)
+    if mask is not None:
+        logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, dh).astype(q.dtype)
+
+
+# Above this sequence length, full-sequence attention runs query-chunked so
+# live scores stay O(q_chunk * S) — the memory-hierarchy adaptation that
+# makes prefill_32k / train_4k fit per-device HBM (DESIGN.md §5).
+CHUNKED_ATTN_THRESHOLD = 4096
+Q_CHUNK = 1024
+
+
+def _sdpa_qchunked(q, k, v, *, causal, window, cap, scale, q_chunk=Q_CHUNK,
+                   unroll=False):
+    """Query-chunked attention via lax.map (flash-style memory behaviour).
+
+    unroll=True replaces the map with a Python loop (roofline probe mode, so
+    cost_analysis counts every chunk)."""
+    B, Sq, H, dh = q.shape
+    Sk = k.shape[1]
+    assert Sq % q_chunk == 0, (Sq, q_chunk)
+    n_chunks = Sq // q_chunk
+    qc = q.reshape(B, n_chunks, q_chunk, H, dh).transpose(1, 0, 2, 3, 4)
+    offs = jnp.arange(n_chunks) * q_chunk
+
+    def one(args):
+        qi, off = args
+        if causal:
+            qpos = off + jnp.arange(q_chunk)[:, None]
+            kpos = jnp.arange(Sk)[None, :]
+            m = kpos <= qpos
+            if window is not None:
+                m = m & (kpos > qpos - window)
+            m = m[None, None, None]
+        else:
+            m = None
+        return _sdpa(qi, k, v, m, cap=cap, scale=scale)
+
+    # checkpoint the chunk body: backward recomputes scores/weights instead of
+    # stacking (n_chunks, ..., Sk) residuals — flash-attention memory behaviour
+    one = jax.checkpoint(one)
+    if unroll:
+        out = jnp.stack([one((qc[i], offs[i])) for i in range(n_chunks)])
+    else:
+        out = jax.lax.map(one, (qc, offs))
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, dh)
+
+
+def causal_mask(Sq: int, Sk: int, window: int | None = None):
+    """(1, 1, 1, Sq, Sk) boolean mask; optional sliding window."""
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    m = kpos <= qpos
+    if window is not None:
+        m = m & (kpos > qpos - window)
+    return m[None, None, None]
+
+
+def gqa_apply(p, x, cfg, *, window=None, positions=None, attn_cap=None,
+              causal=True):
+    """Full-sequence attention (train / prefill). Returns (out, KV)."""
+    B, S, _ = x.shape
+    dh, H, KV = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    positions = positions if positions is not None else jnp.arange(S)[None, :]
+    q = _split_heads(dense_apply(p["wq"], x), H, dh)
+    k = _split_heads(dense_apply(p["wk"], x), KV, dh)
+    v = _split_heads(dense_apply(p["wv"], x), KV, dh)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = shard(q, batch_axes(), None, "model", None)
+    k = shard(k, batch_axes(), None, "model", None)
+    v = shard(v, batch_axes(), None, "model", None)
+    if S >= CHUNKED_ATTN_THRESHOLD and S % Q_CHUNK == 0:
+        out = _sdpa_qchunked(q, k, v, causal=causal, window=window,
+                             cap=attn_cap, scale=cfg.attn_scale,
+                             unroll=getattr(cfg, "unroll_layers", False))
+    else:
+        mask = causal_mask(S, S, window) if causal else None
+        out = _sdpa(q, k, v, mask, cap=attn_cap, scale=cfg.attn_scale)
+    out = dense_apply(p["wo"], out.reshape(B, S, H * dh))
+    return out, KVCache(k, v, jnp.asarray(S, jnp.int32))
+
+
+def gqa_decode(p, x, cache: KVCache, cfg, *, window=None, attn_cap=None):
+    """One-token decode: x (B, 1, d); cache holds `length` past tokens.
+
+    The KV cache is pre-allocated at its static max length; the new token is
+    written at position ``length``.  For sliding-window archs the cache is
+    allocated at window size and written round-robin.
+    """
+    B, one, _ = x.shape
+    dh, H, KV = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    Sk = cache.k.shape[1]
+    pos = cache.length
+    q = _split_heads(dense_apply(p["wq"], x), H, dh)
+    k = _split_heads(dense_apply(p["wk"], x), KV, dh)
+    v = _split_heads(dense_apply(p["wv"], x), KV, dh)
+    posb = jnp.full((B, 1), pos, jnp.int32)
+    q = rope(q, posb, cfg.rope_theta)
+    k = rope(k, posb, cfg.rope_theta)
+    slot = pos % Sk if window is not None else jnp.minimum(pos, Sk - 1)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), slot, 1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), slot, 1)
+    kpos = jnp.arange(Sk)
+    # Window case: the ring buffer is fully valid once pos >= Sk; before that
+    # only slots <= current are populated.
+    visible = (kpos <= slot) | jnp.full((Sk,), pos >= Sk)
+    mask = visible[None, None, None, None, :]
+    out = _sdpa(q, ck, cv, mask, cap=attn_cap, scale=cfg.attn_scale)
+    out = dense_apply(p["wo"], out.reshape(B, 1, H * dh))
+    return out, KVCache(ck, cv, pos + 1)
+
+
+# ---------------------------------------------------------------------------
+# MLA — DeepSeek-V3 Multi-head Latent Attention (arXiv:2412.19437 §2.1)
+# ---------------------------------------------------------------------------
+
+
+def mla_init(key, cfg, dtype=jnp.bfloat16):
+    """Latent attention: KV compressed to d_kv_comp (=512), Q to d_q_comp
+    (=1536); decoupled RoPE keys of dim d_rope (=64)."""
+    ks = jax.random.split(key, 8)
+    d, H = cfg.d_model, cfg.n_heads
+    dc, dq, dr, dh = cfg.mla_kv_comp, cfg.mla_q_comp, cfg.mla_rope_dim, cfg.head_dim
+    return {
+        "w_dq": dense_init(ks[0], d, dq, dtype),  # q down
+        "w_uq": dense_init(ks[1], dq, H * dh, dtype),  # q up (nope part)
+        "w_qr": dense_init(ks[2], dq, H * dr, dtype),  # q rope part
+        "w_dkv": dense_init(ks[3], d, dc, dtype),  # kv joint down
+        "w_kr": dense_init(ks[4], d, dr, dtype),  # shared rope key
+        "w_uk": dense_init(ks[5], dc, H * dh, dtype),  # k up
+        "w_uv": dense_init(ks[6], dc, H * dh, dtype),  # v up
+        "wo": dense_init(ks[7], H * dh, d, dtype),
+    }
+
+
+def mla_spec(cfg) -> dict:
+    return {
+        "w_dq": dense_spec("col"),
+        "w_uq": dense_spec("col"),
+        "w_qr": dense_spec("col"),
+        "w_dkv": dense_spec("col"),
+        "w_kr": dense_spec("replicated"),
+        "w_uk": dense_spec("col"),
+        "w_uv": dense_spec("col"),
+        "wo": dense_spec("row"),
+    }
+
+
+class MLACache(NamedTuple):
+    ckv: jax.Array  # (B, S, d_kv_comp) — compressed latent (the MLA win)
+    krope: jax.Array  # (B, S, d_rope)
+    length: jax.Array
+
+
+def _mla_attend(p, q_nope, q_rope, ckv, krope, cfg, mask):
+    """Attention against compressed latents.
+
+    Absorbed form: score = q_nope^T (W_uk c) + q_rope^T k_rope; value = W_uv c.
+    """
+    B, Sq, H, dh = q_nope.shape
+    dr = cfg.mla_rope_dim
+    k_nope = p["w_uk"]["w"].reshape(cfg.mla_kv_comp, H, dh)
+    v_up = p["w_uv"]["w"].reshape(cfg.mla_kv_comp, H, dh)
+    scale = 1.0 / math.sqrt(dh + dr)
+    # q_nope absorbed into latent space: (B,Sq,H,dc)
+    q_lat = jnp.einsum("bqhd,chd->bqhc", q_nope.astype(jnp.float32),
+                       k_nope.astype(jnp.float32))
+    logits = jnp.einsum("bqhc,bsc->bhqs", q_lat, ckv.astype(jnp.float32))
+    logits = logits + jnp.einsum(
+        "bqhr,bsr->bhqs", q_rope.astype(jnp.float32), krope.astype(jnp.float32)
+    )
+    logits = logits * scale
+    if mask is not None:
+        logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out_lat = jnp.einsum("bhqs,bsc->bqhc", w, ckv.astype(jnp.float32))
+    out = jnp.einsum("bqhc,chd->bqhd", out_lat, v_up.astype(jnp.float32))
+    return out.astype(q_nope.dtype)
+
+
+def mla_apply(p, x, cfg, *, positions=None):
+    B, S, _ = x.shape
+    H, dh, dr = cfg.n_heads, cfg.head_dim, cfg.mla_rope_dim
+    positions = positions if positions is not None else jnp.arange(S)[None, :]
+    cq = dense_apply(p["w_dq"], x)
+    q_nope = dense_apply(p["w_uq"], cq).reshape(B, S, H, dh)
+    q_rope = dense_apply(p["w_qr"], cq).reshape(B, S, H, dr)
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    ckv = dense_apply(p["w_dkv"], x)  # (B, S, dc)
+    krope = rope(
+        dense_apply(p["w_kr"], x)[:, :, None, :], positions, cfg.rope_theta
+    )[:, :, 0, :]
+    if S >= CHUNKED_ATTN_THRESHOLD and S % Q_CHUNK == 0:
+        nq = S // Q_CHUNK
+        qn = q_nope.reshape(B, nq, Q_CHUNK, H, dh).transpose(1, 0, 2, 3, 4)
+        qr = q_rope.reshape(B, nq, Q_CHUNK, H, dr).transpose(1, 0, 2, 3, 4)
+        offs = jnp.arange(nq) * Q_CHUNK
+
+        def one(args):
+            qni, qri, off = args
+            qpos = off + jnp.arange(Q_CHUNK)[:, None]
+            m = (jnp.arange(S)[None, :] <= qpos)[None, None]
+            return _mla_attend(p, qni, qri, ckv, krope, cfg, m)
+
+        one = jax.checkpoint(one)  # flash-style: recompute scores in backward
+        if getattr(cfg, "unroll_layers", False):
+            out = jnp.stack([one((qn[i], qr[i], offs[i])) for i in range(nq)])
+        else:
+            out = jax.lax.map(one, (qn, qr, offs))
+        out = out.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dh)
+    else:
+        mask = causal_mask(S, S)[:, :, 0]  # MLA logits are (B, H, q, s)
+        out = _mla_attend(p, q_nope, q_rope, ckv, krope, cfg, mask)
+    out = dense_apply(p["wo"], out.reshape(B, S, H * dh))
+    return out, MLACache(ckv, krope, jnp.asarray(S, jnp.int32))
+
+
+def mla_decode(p, x, cache: MLACache, cfg):
+    B, one, _ = x.shape
+    H, dh, dr = cfg.n_heads, cfg.head_dim, cfg.mla_rope_dim
+    pos = cache.length
+    posb = jnp.full((B, 1), pos, jnp.int32)
+    cq = dense_apply(p["w_dq"], x)
+    q_nope = dense_apply(p["w_uq"], cq).reshape(B, 1, H, dh)
+    q_rope = rope(dense_apply(p["w_qr"], cq).reshape(B, 1, H, dr), posb,
+                  cfg.rope_theta)
+    ckv_new = dense_apply(p["w_dkv"], x)
+    kr_new = rope(dense_apply(p["w_kr"], x)[:, :, None, :], posb,
+                  cfg.rope_theta)[:, :, 0, :]
+    Sk = cache.ckv.shape[1]
+    slot = jnp.minimum(pos, Sk - 1)
+    ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache.ckv, ckv_new.astype(cache.ckv.dtype), slot, 1)
+    krope = jax.lax.dynamic_update_slice_in_dim(
+        cache.krope, kr_new.astype(cache.krope.dtype), slot, 1)
+    mask = (jnp.arange(Sk) <= slot)[None, None, None, :]
+    out = _mla_attend(p, q_nope, q_rope, ckv, krope, cfg, mask)
+    out = dense_apply(p["wo"], out.reshape(B, 1, H * dh))
+    return out, MLACache(ckv, krope, pos + 1)
+
+
+# ---------------------------------------------------------------------------
+# cross attention (enc-dec; seamless-m4t)
+# ---------------------------------------------------------------------------
+
+
+def cross_attn_apply(p, x, memory, cfg):
+    """Decoder cross-attention over encoder memory (B, Sm, d)."""
+    B, S, _ = x.shape
+    dh, H, KV = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = _split_heads(dense_apply(p["wq"], x), H, dh)
+    k = _split_heads(dense_apply(p["wk"], memory), KV, dh)
+    v = _split_heads(dense_apply(p["wv"], memory), KV, dh)
+    out = _sdpa(q, k, v, mask=None, scale=cfg.attn_scale)
+    return dense_apply(p["wo"], out.reshape(B, S, H * dh))

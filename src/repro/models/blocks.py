@@ -1,0 +1,276 @@
+"""Layer blocks: one (init, spec, apply, decode, cache) bundle per block kind.
+
+Block kinds (ArchConfig.block_pattern entries):
+  attn          pre-LN GQA + SwiGLU MLP (llama / qwen / smollm / llava)
+  attn_local    gemma2 sliding-window layer (+ post-norms, softcaps)
+  attn_global   gemma2 full-attention layer
+  moe           GQA (optional SWA) + MoE FFN (mixtral)
+  mla_dense     DeepSeek MLA + dense SwiGLU (prefix layers)
+  mla_moe       DeepSeek MLA + 256-expert MoE
+  mamba         Mamba2 SSD block (zamba2)
+  shared_attn   zamba2's weight-shared attention+MLP block
+  mlstm/slstm   xLSTM blocks
+  cross_attn    enc-dec decoder layer: self-attn + cross-attn + MLP (seamless)
+
+The SparseP integration point: when cfg.ffn_density < 1, dense-FFN blocks use
+sparse/layers.py:BlockSparseFFN (BCSR weights through the paper's kernels).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import attention as A
+from . import linear_attn as LA
+from . import moe as M
+from .common import rmsnorm, rmsnorm_init, swiglu_apply, swiglu_init, swiglu_spec
+
+__all__ = ["block_init", "block_spec", "block_apply", "block_decode", "init_cache"]
+
+_ATTN_KINDS = ("attn", "attn_local", "attn_global", "moe", "shared_attn", "cross_attn")
+
+
+def _window(cfg, kind):
+    if kind == "attn_local":
+        return cfg.sliding_window
+    if kind == "attn_global":
+        return None
+    return cfg.sliding_window  # moe (mixtral SWA) / plain attn configs
+
+
+def _mlp_init(key, cfg, dtype):
+    if cfg.ffn_density < 1.0:
+        from repro.sparse.layers import block_sparse_ffn_init
+
+        return block_sparse_ffn_init(key, cfg, dtype)
+    return swiglu_init(key, cfg.d_model, cfg.d_ff, dtype)
+
+
+def _mlp_spec(cfg):
+    if cfg.ffn_density < 1.0:
+        from repro.sparse.layers import block_sparse_ffn_spec
+
+        return block_sparse_ffn_spec(cfg)
+    return swiglu_spec()
+
+
+def _mlp_apply(p, x, cfg):
+    if cfg.ffn_density < 1.0:
+        from repro.sparse.layers import block_sparse_ffn_apply
+
+        return block_sparse_ffn_apply(p, x, cfg)
+    act = jax.nn.gelu if cfg.gemma_norm else jax.nn.silu
+    return swiglu_apply(p, x, act=act)
+
+
+def block_init(key, cfg, kind, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 4)
+    if kind in ("attn", "attn_local", "attn_global", "shared_attn"):
+        p = {
+            "ln1": rmsnorm_init(cfg.d_model, dtype),
+            "attn": A.gqa_init(ks[0], cfg, dtype),
+            "ln2": rmsnorm_init(cfg.d_model, dtype),
+            "mlp": _mlp_init(ks[1], cfg, dtype),
+        }
+        if cfg.gemma_norm:
+            p["ln1b"] = rmsnorm_init(cfg.d_model, dtype)
+            p["ln2b"] = rmsnorm_init(cfg.d_model, dtype)
+        return p
+    if kind == "cross_attn":
+        return {
+            "ln1": rmsnorm_init(cfg.d_model, dtype),
+            "attn": A.gqa_init(ks[0], cfg, dtype),
+            "ln_x": rmsnorm_init(cfg.d_model, dtype),
+            "xattn": A.gqa_init(ks[2], cfg, dtype),
+            "ln2": rmsnorm_init(cfg.d_model, dtype),
+            "mlp": _mlp_init(ks[1], cfg, dtype),
+        }
+    if kind == "moe":
+        return {
+            "ln1": rmsnorm_init(cfg.d_model, dtype),
+            "attn": A.gqa_init(ks[0], cfg, dtype),
+            "ln2": rmsnorm_init(cfg.d_model, dtype),
+            "moe": M.moe_init(ks[1], cfg, dtype),
+        }
+    if kind == "mla_dense":
+        return {
+            "ln1": rmsnorm_init(cfg.d_model, dtype),
+            "mla": A.mla_init(ks[0], cfg, dtype),
+            "ln2": rmsnorm_init(cfg.d_model, dtype),
+            "mlp": _mlp_init(ks[1], cfg, dtype),
+        }
+    if kind == "mla_moe":
+        return {
+            "ln1": rmsnorm_init(cfg.d_model, dtype),
+            "mla": A.mla_init(ks[0], cfg, dtype),
+            "ln2": rmsnorm_init(cfg.d_model, dtype),
+            "moe": M.moe_init(ks[1], cfg, dtype),
+        }
+    if kind == "mamba":
+        return {
+            "ln1": rmsnorm_init(cfg.d_model, dtype),
+            "mamba": LA.mamba2_init(ks[0], cfg, dtype),
+        }
+    if kind == "mlstm":
+        return {
+            "ln1": rmsnorm_init(cfg.d_model, dtype),
+            "mlstm": LA.mlstm_init(ks[0], cfg, dtype),
+        }
+    if kind == "slstm":
+        return {
+            "ln1": rmsnorm_init(cfg.d_model, dtype),
+            "slstm": LA.slstm_init(ks[0], cfg, dtype),
+        }
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def block_spec(cfg, kind):
+    ln = {"scale": P(None)}
+    if kind in ("attn", "attn_local", "attn_global", "shared_attn"):
+        sp = {"ln1": ln, "attn": A.gqa_spec(cfg), "ln2": ln, "mlp": _mlp_spec(cfg)}
+        if cfg.gemma_norm:
+            sp["ln1b"] = ln
+            sp["ln2b"] = ln
+        return sp
+    if kind == "cross_attn":
+        return {
+            "ln1": ln,
+            "attn": A.gqa_spec(cfg),
+            "ln_x": ln,
+            "xattn": A.gqa_spec(cfg),
+            "ln2": ln,
+            "mlp": _mlp_spec(cfg),
+        }
+    if kind == "moe":
+        return {"ln1": ln, "attn": A.gqa_spec(cfg), "ln2": ln, "moe": M.moe_spec(cfg)}
+    if kind == "mla_dense":
+        return {"ln1": ln, "mla": A.mla_spec(cfg), "ln2": ln, "mlp": _mlp_spec(cfg)}
+    if kind == "mla_moe":
+        return {"ln1": ln, "mla": A.mla_spec(cfg), "ln2": ln, "moe": M.moe_spec(cfg)}
+    if kind == "mamba":
+        return {"ln1": ln, "mamba": LA.mamba2_spec(cfg)}
+    if kind == "mlstm":
+        return {"ln1": ln, "mlstm": LA.mlstm_spec(cfg)}
+    if kind == "slstm":
+        return {"ln1": ln, "slstm": LA.slstm_spec(cfg)}
+    raise ValueError(kind)
+
+
+def block_apply(p, h, cfg, kind, memory=None):
+    """Full-sequence forward. Returns (h, cache) — cache for prefill reuse."""
+    gn = cfg.gemma_norm
+    if kind in ("attn", "attn_local", "attn_global", "shared_attn", "moe"):
+        a, kv = A.gqa_apply(
+            p["attn"],
+            rmsnorm(p["ln1"], h, gemma_style=gn),
+            cfg,
+            window=_window(cfg, kind),
+            attn_cap=cfg.attn_softcap,
+        )
+        if gn:
+            a = rmsnorm(p["ln1b"], a, gemma_style=True)
+        h = h + a
+        hin = rmsnorm(p["ln2"], h, gemma_style=gn)
+        f = M.moe_apply(p["moe"], hin, cfg) if kind == "moe" else _mlp_apply(p["mlp"], hin, cfg)
+        if gn:
+            f = rmsnorm(p["ln2b"], f, gemma_style=True)
+        return h + f, kv
+    if kind == "cross_attn":
+        a, kv = A.gqa_apply(p["attn"], rmsnorm(p["ln1"], h), cfg)
+        h = h + a
+        h = h + A.cross_attn_apply(p["xattn"], rmsnorm(p["ln_x"], h), memory, cfg)
+        return h + _mlp_apply(p["mlp"], rmsnorm(p["ln2"], h), cfg), kv
+    if kind in ("mla_dense", "mla_moe"):
+        a, cache = A.mla_apply(p["mla"], rmsnorm(p["ln1"], h), cfg)
+        h = h + a
+        hin = rmsnorm(p["ln2"], h)
+        f = M.moe_apply(p["moe"], hin, cfg) if kind == "mla_moe" else _mlp_apply(p["mlp"], hin, cfg)
+        return h + f, cache
+    if kind == "mamba":
+        y, state = LA.mamba2_apply(p["mamba"], rmsnorm(p["ln1"], h), cfg)
+        return h + y, state
+    if kind == "mlstm":
+        y, state = LA.mlstm_apply(p["mlstm"], rmsnorm(p["ln1"], h), cfg)
+        return h + y, state
+    if kind == "slstm":
+        y, state = LA.slstm_apply(p["slstm"], rmsnorm(p["ln1"], h), cfg)
+        return h + y, state
+    raise ValueError(kind)
+
+
+def block_decode(p, h, cache, cfg, kind, memory=None):
+    """One-token decode against this block's cache. Returns (h, cache)."""
+    gn = cfg.gemma_norm
+    if kind in ("attn", "attn_local", "attn_global", "shared_attn", "moe"):
+        a, cache = A.gqa_decode(
+            p["attn"],
+            rmsnorm(p["ln1"], h, gemma_style=gn),
+            cache,
+            cfg,
+            window=_window(cfg, kind),
+            attn_cap=cfg.attn_softcap,
+        )
+        if gn:
+            a = rmsnorm(p["ln1b"], a, gemma_style=True)
+        h = h + a
+        hin = rmsnorm(p["ln2"], h, gemma_style=gn)
+        f = M.moe_apply(p["moe"], hin, cfg) if kind == "moe" else _mlp_apply(p["mlp"], hin, cfg)
+        if gn:
+            f = rmsnorm(p["ln2b"], f, gemma_style=True)
+        return h + f, cache
+    if kind == "cross_attn":
+        a, cache = A.gqa_decode(p["attn"], rmsnorm(p["ln1"], h), cache, cfg)
+        h = h + a
+        h = h + A.cross_attn_apply(p["xattn"], rmsnorm(p["ln_x"], h), memory, cfg)
+        return h + _mlp_apply(p["mlp"], rmsnorm(p["ln2"], h), cfg), cache
+    if kind in ("mla_dense", "mla_moe"):
+        a, cache = A.mla_decode(p["mla"], rmsnorm(p["ln1"], h), cache, cfg)
+        h = h + a
+        hin = rmsnorm(p["ln2"], h)
+        f = M.moe_apply(p["moe"], hin, cfg) if kind == "mla_moe" else _mlp_apply(p["mlp"], hin, cfg)
+        return h + f, cache
+    if kind == "mamba":
+        y, cache = LA.mamba2_decode(p["mamba"], rmsnorm(p["ln1"], h), cache, cfg)
+        return h + y, cache
+    if kind == "mlstm":
+        y, cache = LA.mlstm_decode(p["mlstm"], rmsnorm(p["ln1"], h), cache, cfg)
+        return h + y, cache
+    if kind == "slstm":
+        y, cache = LA.slstm_decode(p["slstm"], rmsnorm(p["ln1"], h), cache, cfg)
+        return h + y, cache
+    raise ValueError(kind)
+
+
+def init_cache(cfg, kind, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Zero decode-cache for one block. KV caches for SWA kinds are allocated
+    at window size (long_500k stays window-bounded, DESIGN.md §4)."""
+    if kind in _ATTN_KINDS:
+        window = _window(cfg, kind)
+        S = min(max_len, window) if window else max_len
+        kv_shape = (batch, S, cfg.n_kv_heads, cfg.head_dim)
+        return A.KVCache(
+            jnp.zeros(kv_shape, dtype), jnp.zeros(kv_shape, dtype),
+            jnp.zeros((), jnp.int32),
+        )
+    if kind in ("mla_dense", "mla_moe"):
+        return A.MLACache(
+            jnp.zeros((batch, max_len, cfg.mla_kv_comp), dtype),
+            jnp.zeros((batch, max_len, cfg.mla_rope_dim), dtype),
+            jnp.zeros((), jnp.int32),
+        )
+    if kind == "mamba":
+        dh = cfg.ssm_d_inner // cfg.ssm_heads
+        return LA.RecurrentState(
+            jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state, dh), jnp.float32),
+            jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state), jnp.float32),
+        )
+    if kind == "mlstm":
+        dh = cfg.d_model // cfg.n_heads
+        return LA.RecurrentState(
+            jnp.zeros((batch, cfg.n_heads, dh, dh), jnp.float32),
+            jnp.zeros((batch, cfg.n_heads, dh), jnp.float32),
+        )
+    if kind == "slstm":
+        return LA.slstm_zero_state(batch, cfg)
+    raise ValueError(kind)

@@ -1,0 +1,363 @@
+"""Recurrent / linear-attention blocks: Mamba2 (SSD), mLSTM, sLSTM.
+
+One chunked gated-linear-attention primitive serves both Mamba2's SSD
+(scalar-per-head decay, arXiv:2405.21060 form) and xLSTM's mLSTM (matrix
+memory with exponential gating, arXiv:2405.04517): both maintain a per-head
+matrix state S (dk x dv) updated as
+
+    S_t = a_t * S_{t-1} + k_t v_t^T        (a_t in (0,1], data-dependent)
+    y_t = q_t @ S_t   (+ normalizer)
+
+Training uses the chunkwise-parallel form (intra-chunk attention matmul +
+inter-chunk state scan) — the production formulation (MXU-dominated); decode
+is the O(1)-state recurrence.  sLSTM keeps its genuinely sequential scalar
+recurrence (that is its architectural point) via lax.scan over time.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import batch_axes, dense_apply, dense_init, dense_spec, rmsnorm, rmsnorm_init, shard
+
+__all__ = [
+    "gla_chunked",
+    "gla_step",
+    "mamba2_init",
+    "mamba2_spec",
+    "mamba2_apply",
+    "mamba2_decode",
+    "mlstm_init",
+    "mlstm_spec",
+    "mlstm_apply",
+    "mlstm_decode",
+    "slstm_init",
+    "slstm_spec",
+    "slstm_apply",
+    "slstm_decode",
+    "RecurrentState",
+]
+
+
+class RecurrentState(NamedTuple):
+    s: jax.Array  # (B, H, dk, dv) matrix state
+    n: jax.Array  # (B, H, dk) normalizer state (mLSTM) or zeros (mamba2)
+
+
+# ---------------------------------------------------------------------------
+# chunked gated linear attention (shared primitive)
+# ---------------------------------------------------------------------------
+
+
+def gla_chunked(q, k, v, log_a, chunk: int = 256, normalize: bool = False,
+                unroll: bool = False):
+    """Chunkwise-parallel gated linear attention.
+
+    q/k/v: (B, S, H, dk|dv); log_a: (B, S, H) per-step log decay (<= 0).
+    Returns (y, final_state).  normalize=True adds mLSTM's max-stabilized
+    denominator n_t = sum of decayed keys (simplified: running key norm).
+    unroll=True unrolls the inter-chunk recurrence (roofline probe mode).
+    """
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    C = min(chunk, S)
+    assert S % C == 0, (S, C)
+    NC = S // C
+
+    def resh(x):
+        return x.reshape(B, NC, C, H, -1).astype(jnp.float32)
+
+    qc, kc, vc = resh(q), resh(k), resh(v)
+    la = log_a.reshape(B, NC, C, H).astype(jnp.float32)
+    cum = jnp.cumsum(la, axis=2)  # within-chunk cumulative log decay
+    total = cum[:, :, -1, :]  # (B, NC, H)
+
+    # intra-chunk: y_i += sum_{j<=i} exp(cum_i - cum_j) (q_i.k_j) v_j
+    scores = jnp.einsum("bnihd,bnjhd->bnhij", qc, kc)
+    decay = cum[:, :, :, :, None].transpose(0, 1, 3, 2, 4) - cum[
+        :, :, :, :, None
+    ].transpose(0, 1, 3, 4, 2)  # (B,NC,H,i,j) = cum_i - cum_j
+    causal = jnp.tril(jnp.ones((C, C), bool))
+    w = jnp.where(causal, jnp.exp(jnp.minimum(decay, 0.0)) , 0.0)
+    intra = jnp.einsum("bnhij,bnjhd->bnihd", scores * w, vc)
+
+    # inter-chunk recurrence over NC chunks
+    # state contribution of chunk n: sum_j exp(total_n - cum_j) k_j v_j^T
+    kv = jnp.einsum(
+        "bnjhk,bnjhv->bnhkv", kc * jnp.exp(total[:, :, None] - cum)[..., None], vc
+    )
+    k_dec = (kc * jnp.exp(total[:, :, None] - cum)[..., None]).sum(axis=2)  # (B,NC,H,dk)
+
+    def scan_fn(carry, xs):
+        s, n = carry  # (B,H,dk,dv), (B,H,dk)
+        kv_n, kd_n, tot_n, q_n, cum_n = xs
+        dec = jnp.exp(tot_n)[:, :, None, None]
+        inter = jnp.einsum("bihk,bhkv->bihv", q_n * jnp.exp(cum_n)[..., None], s)
+        n_inter = jnp.einsum("bihk,bhk->bih", q_n * jnp.exp(cum_n)[..., None], n)
+        s = dec * s + kv_n
+        n = jnp.exp(tot_n)[:, :, None] * n + kd_n
+        return (s, n), (inter, n_inter)
+
+    s0 = jnp.zeros((B, H, dk, dv), jnp.float32)
+    n0 = jnp.zeros((B, H, dk), jnp.float32)
+    xs = (
+        kv.transpose(1, 0, 2, 3, 4),
+        k_dec.transpose(1, 0, 2, 3),
+        total.transpose(1, 0, 2),
+        qc.transpose(1, 0, 2, 3, 4),
+        cum.transpose(1, 0, 2, 3),
+    )
+    # NOTE: the inter-chunk recurrence always uses lax.scan — unrolling NC
+    # chunks inside the L2 roofline probe made XLA compile times pathological
+    # (tens of minutes).  The probe instead counts the body once and
+    # analysis/roofline.py adds the (NC-1)x analytic correction
+    # (gla_scan_correction) — same method as the sLSTM time scan.
+    del unroll
+    (s_fin, n_fin), (inter, n_inter) = jax.lax.scan(scan_fn, (s0, n0), xs)
+    inter = inter.transpose(1, 0, 2, 3, 4)  # (B,NC,C,H,dv)
+    y = intra + inter
+    if normalize:
+        n_intra = jnp.einsum("bnhij,bnjhd->bnihd", scores * w,
+                             jnp.ones_like(vc[..., :1])) [..., 0]
+        denom = jnp.abs(n_inter.transpose(1, 0, 2, 3) + n_intra)
+        y = y / jnp.maximum(denom[..., None], 1.0)
+    y = y.reshape(B, S, H, dv)
+    return y, RecurrentState(s_fin, n_fin)
+
+
+def gla_step(state: RecurrentState, q, k, v, log_a, normalize: bool = False):
+    """Single-token recurrence (decode). q/k/v: (B, 1, H, d)."""
+    a = jnp.exp(log_a.astype(jnp.float32))[:, 0, :, None, None]  # (B,H,1,1)
+    kv = jnp.einsum(
+        "bhk,bhv->bhkv", k[:, 0].astype(jnp.float32), v[:, 0].astype(jnp.float32)
+    )
+    s = a * state.s + kv
+    n = a[..., 0] * state.n + k[:, 0].astype(jnp.float32)
+    y = jnp.einsum("bhk,bhkv->bhv", q[:, 0].astype(jnp.float32), s)
+    if normalize:
+        denom = jnp.abs(jnp.einsum("bhk,bhk->bh", q[:, 0].astype(jnp.float32), n))
+        y = y / jnp.maximum(denom[..., None], 1.0)
+    return y[:, None].astype(q.dtype), RecurrentState(s, n)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block (zamba2's SSM component) — SSD parameterization
+# ---------------------------------------------------------------------------
+
+
+def mamba2_init(key, cfg, dtype=jnp.bfloat16):
+    """d_inner = 2*d_model, heads of size head_dim, state = ssm_state."""
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    di = cfg.ssm_d_inner
+    H = cfg.ssm_heads
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di, dtype),  # x and gate z
+        "bc_proj": dense_init(ks[1], d, 2 * cfg.ssm_state * H, dtype),  # B, C
+        "dt_proj": dense_init(ks[2], d, H, dtype),
+        "a_log": jnp.zeros((H,), jnp.float32),  # log decay rates
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "out_proj": dense_init(ks[3], di, d, dtype),
+        "norm": rmsnorm_init(di, dtype),
+    }
+
+
+def mamba2_spec(cfg) -> dict:
+    return {
+        "in_proj": dense_spec("col"),
+        "bc_proj": dense_spec("col"),
+        "dt_proj": dense_spec("col"),
+        "a_log": P(None),
+        "d_skip": P(None),
+        "out_proj": dense_spec("row"),
+        "norm": {"scale": P(None)},
+    }
+
+
+def _mamba2_qkv(p, x, cfg):
+    B, S, _ = x.shape
+    H, N = cfg.ssm_heads, cfg.ssm_state
+    di = cfg.ssm_d_inner
+    dh = di // H
+    xz = dense_apply(p["in_proj"], x)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    bc = dense_apply(p["bc_proj"], x).reshape(B, S, H, 2 * N)
+    b, c = jnp.split(bc, 2, axis=-1)  # (B,S,H,N)
+    dt = jax.nn.softplus(dense_apply(p["dt_proj"], x).astype(jnp.float32))  # (B,S,H)
+    log_a = -jnp.exp(p["a_log"])[None, None, :] * dt  # (B,S,H), <= 0
+    v = xin.reshape(B, S, H, dh) * dt[..., None].astype(xin.dtype)
+    return b, c, v, log_a, z, xin
+
+
+def mamba2_apply(p, x, cfg, chunk: int = 256):
+    """SSD: y = GLA(q=C, k=B, v=dt*x, decay=exp(-exp(A) dt)) + D*x, gated."""
+    B, S, _ = x.shape
+    b, c, v, log_a, z, xin = _mamba2_qkv(p, x, cfg)
+    y, state = gla_chunked(c, b, v, log_a, chunk=chunk,
+                           unroll=getattr(cfg, 'unroll_layers', False))
+    H = cfg.ssm_heads
+    dh = cfg.ssm_d_inner // H
+    y = y + p["d_skip"][None, None, :, None] * xin.reshape(B, S, H, dh).astype(jnp.float32)
+    y = y.reshape(B, S, cfg.ssm_d_inner).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return dense_apply(p["out_proj"], y), state
+
+
+def mamba2_decode(p, x, state: RecurrentState, cfg):
+    B, S, _ = x.shape  # S == 1
+    b, c, v, log_a, z, xin = _mamba2_qkv(p, x, cfg)
+    y, state = gla_step(state, c, b, v, log_a)
+    H = cfg.ssm_heads
+    dh = cfg.ssm_d_inner // H
+    y = y + p["d_skip"][None, None, :, None] * xin.reshape(B, 1, H, dh).astype(jnp.float32)
+    y = y.reshape(B, 1, cfg.ssm_d_inner).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return dense_apply(p["out_proj"], y), state
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (xLSTM) — matrix memory, exponential input gate
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(key, cfg, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 6)
+    d, H = cfg.d_model, cfg.n_heads
+    dh = d // H
+    return {
+        "wq": dense_init(ks[0], d, d, dtype),
+        "wk": dense_init(ks[1], d, d, dtype),
+        "wv": dense_init(ks[2], d, d, dtype),
+        "w_ig": dense_init(ks[3], d, H, dtype),  # input gate (exp)
+        "w_fg": dense_init(ks[4], d, H, dtype),  # forget gate (sigmoid)
+        "out_proj": dense_init(ks[5], d, d, dtype),
+        "norm": rmsnorm_init(d, dtype),
+    }
+
+
+def mlstm_spec(cfg) -> dict:
+    return {
+        "wq": dense_spec("col"),
+        "wk": dense_spec("col"),
+        "wv": dense_spec("col"),
+        "w_ig": dense_spec("col"),
+        "w_fg": dense_spec("col"),
+        "out_proj": dense_spec("row"),
+        "norm": {"scale": P(None)},
+    }
+
+
+def _mlstm_qkv(p, x, cfg):
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    q = dense_apply(p["wq"], x).reshape(B, S, H, dh) / math.sqrt(dh)
+    k = dense_apply(p["wk"], x).reshape(B, S, H, dh)
+    v = dense_apply(p["wv"], x).reshape(B, S, H, dh)
+    log_f = jax.nn.log_sigmoid(dense_apply(p["w_fg"], x).astype(jnp.float32))
+    ig = dense_apply(p["w_ig"], x).astype(jnp.float32)
+    # fold the (stabilized) exponential input gate into k
+    k = k * jnp.exp(jnp.minimum(ig, 0.0))[..., None].astype(k.dtype)
+    return q, k, v, log_f
+
+
+def mlstm_apply(p, x, cfg, chunk: int = 256):
+    B, S, d = x.shape
+    q, k, v, log_f = _mlstm_qkv(p, x, cfg)
+    y, state = gla_chunked(q, k, v, log_f, chunk=chunk, normalize=True,
+                           unroll=getattr(cfg, 'unroll_layers', False))
+    y = y.reshape(B, S, d).astype(x.dtype)
+    return dense_apply(p["out_proj"], rmsnorm(p["norm"], y)), state
+
+
+def mlstm_decode(p, x, state: RecurrentState, cfg):
+    B, S, d = x.shape
+    q, k, v, log_f = _mlstm_qkv(p, x, cfg)
+    y, state = gla_step(state, q, k, v, log_f, normalize=True)
+    y = y.reshape(B, 1, d).astype(x.dtype)
+    return dense_apply(p["out_proj"], rmsnorm(p["norm"], y)), state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (xLSTM) — scalar memory, true sequential recurrence
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(key, cfg, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 3)
+    d, H = cfg.d_model, cfg.n_heads
+    dh = d // H
+    return {
+        "w_in": dense_init(ks[0], d, 4 * d, dtype),  # i, f, z, o pre-acts
+        "r": jax.random.normal(ks[1], (H, dh, 4 * dh), jnp.float32)
+        * (1.0 / math.sqrt(dh)),  # block-diagonal recurrent weights
+        "out_proj": dense_init(ks[2], d, d, dtype),
+        "norm": rmsnorm_init(d, dtype),
+    }
+
+
+def slstm_spec(cfg) -> dict:
+    return {
+        "w_in": dense_spec("col"),
+        "r": P("model", None, None),  # heads over model axis
+        "out_proj": dense_spec("row"),
+        "norm": {"scale": P(None)},
+    }
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array  # (B, H, dh)
+    n: jax.Array
+    h: jax.Array
+    m: jax.Array  # stabilizer
+
+
+def slstm_zero_state(B, cfg):
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    z = jnp.zeros((B, H, dh), jnp.float32)
+    return SLSTMState(z, z, z, jnp.zeros((B, H, dh), jnp.float32))
+
+
+def _slstm_cell(p, state: SLSTMState, pre):
+    """pre: (B, H, 4*dh) input pre-activations for one step."""
+    B, H, dh4 = pre.shape
+    dh = dh4 // 4
+    rec = jnp.einsum("bhd,hde->bhe", state.h, p["r"])  # (B,H,4dh)
+    z_i, z_f, z_z, z_o = jnp.split(pre.astype(jnp.float32) + rec, 4, axis=-1)
+    m_new = jnp.maximum(z_f + state.m, z_i)  # log-space stabilizer
+    i = jnp.exp(z_i - m_new)
+    f = jnp.exp(z_f + state.m - m_new)
+    c = f * state.c + i * jnp.tanh(z_z)
+    n = f * state.n + i
+    h = jax.nn.sigmoid(z_o) * c / jnp.maximum(n, 1.0)
+    return SLSTMState(c, n, h, m_new)
+
+
+def slstm_apply(p, x, cfg):
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    pre = dense_apply(p["w_in"], x).reshape(B, S, H, 4 * dh)
+
+    def step(state, pre_t):
+        state = _slstm_cell(p, state, pre_t)
+        return state, state.h
+
+    state, hs = jax.lax.scan(step, slstm_zero_state(B, cfg), pre.transpose(1, 0, 2, 3))
+    y = hs.transpose(1, 0, 2, 3).reshape(B, S, d).astype(x.dtype)
+    return dense_apply(p["out_proj"], rmsnorm(p["norm"], y)), state
+
+
+def slstm_decode(p, x, state: SLSTMState, cfg):
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    pre = dense_apply(p["w_in"], x).reshape(B, H, 4 * dh)
+    state = _slstm_cell(p, state, pre)
+    y = state.h.reshape(B, 1, d).astype(x.dtype)
+    return dense_apply(p["out_proj"], rmsnorm(p["norm"], y)), state

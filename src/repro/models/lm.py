@@ -1,0 +1,415 @@
+"""LM assembly: embeddings -> (prefix blocks) -> scanned repeats -> head.
+
+All 10 assigned architectures run through this module, driven purely by
+ArchConfig (block_pattern / prefix_pattern / family).  Layer repeats are
+``lax.scan``ned over stacked params (compile-time O(1) in depth) with full
+per-repeat remat for training.
+
+Entry points:
+  init_params / abstract_params / param_specs
+  forward(params, tokens, ...)            -> logits               (train)
+  loss_fn(params, batch)                  -> scalar loss
+  prefill(params, tokens, max_len)        -> (last_logits, caches)
+  decode_step(params, token, caches)      -> (logits, caches)
+  encode(params, frames)                  -> encoder memory (enc-dec archs)
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from .blocks import block_apply, block_decode, block_init, block_spec, init_cache
+from .common import (
+    batch_axes,
+    batch_shard,
+    cross_entropy,
+    embed_init,
+    embed_spec,
+    rmsnorm,
+    rmsnorm_init,
+    shard,
+    softcap,
+)
+from . import attention as A
+
+__all__ = [
+    "init_params",
+    "abstract_params",
+    "param_specs",
+    "forward",
+    "loss_fn",
+    "prefill",
+    "decode_step",
+    "encode",
+    "init_caches",
+]
+
+
+def _stack_init(key, cfg, kind, n, dtype):
+    """Init n copies of a block, stacked on axis 0 (scan-ready)."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: block_init(k, cfg, kind, dtype))(keys)
+
+
+def init_params(key, cfg: ArchConfig, dtype=jnp.bfloat16):
+    keys = iter(jax.random.split(key, 16))
+    p: dict[str, Any] = {"embed": embed_init(next(keys), cfg.vocab, cfg.d_model, dtype)}
+    p["final_norm"] = rmsnorm_init(cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = {
+            "w": jax.random.normal(next(keys), (cfg.d_model, cfg.vocab), dtype)
+            * (1.0 / math.sqrt(cfg.d_model))
+        }
+    for i, kind in enumerate(cfg.prefix_pattern):
+        p[f"prefix{i}"] = block_init(next(keys), cfg, kind, dtype)
+    NR = cfg.n_repeats
+    p["blocks"] = {
+        f"b{j}": _stack_init(next(keys), cfg, kind, NR, dtype)
+        for j, kind in enumerate(cfg.block_pattern)
+        if kind != "shared_attn"
+    }
+    if "shared_attn" in cfg.block_pattern:
+        p["shared"] = block_init(next(keys), cfg, "shared_attn", dtype)
+    if cfg.encoder_layers:
+        p["encoder"] = {
+            "blocks": _stack_init(next(keys), cfg, "attn", cfg.encoder_layers, dtype),
+            "norm": rmsnorm_init(cfg.d_model, dtype),
+            "in_proj": {
+                "w": jax.random.normal(next(keys), (cfg.d_model, cfg.d_model), dtype)
+                * (1.0 / math.sqrt(cfg.d_model))
+            },
+        }
+    if cfg.mtp_depth:
+        p["mtp"] = {
+            "proj": {
+                "w": jax.random.normal(next(keys), (2 * cfg.d_model, cfg.d_model), dtype)
+                * (1.0 / math.sqrt(2 * cfg.d_model))
+            },
+            "norm": rmsnorm_init(cfg.d_model, dtype),
+            "block": block_init(next(keys), cfg, cfg.prefix_pattern[0]
+                                if cfg.prefix_pattern else cfg.block_pattern[0], dtype),
+        }
+    return p
+
+
+def abstract_params(cfg: ArchConfig, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct tree (dry-run: no allocation)."""
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg, dtype))
+
+
+def _add_leading(spec_tree):
+    """Prepend a None axis to every PartitionSpec (stacked layer dim)."""
+    return jax.tree.map(
+        lambda s: P(*((None,) + tuple(s))),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def param_specs(cfg: ArchConfig):
+    sp: dict[str, Any] = {"embed": embed_spec()}
+    sp["final_norm"] = {"scale": P(None)}
+    if not cfg.tie_embeddings:
+        sp["lm_head"] = {"w": P("data", "model")}
+    for i, kind in enumerate(cfg.prefix_pattern):
+        sp[f"prefix{i}"] = block_spec(cfg, kind)
+    sp["blocks"] = {
+        f"b{j}": _add_leading(block_spec(cfg, kind))
+        for j, kind in enumerate(cfg.block_pattern)
+        if kind != "shared_attn"
+    }
+    if "shared_attn" in cfg.block_pattern:
+        sp["shared"] = block_spec(cfg, "shared_attn")
+    if cfg.encoder_layers:
+        sp["encoder"] = {
+            "blocks": _add_leading(block_spec(cfg, "attn")),
+            "norm": {"scale": P(None)},
+            "in_proj": {"w": P("data", "model")},
+        }
+    if cfg.mtp_depth:
+        sp["mtp"] = {
+            "proj": {"w": P("data", "model")},
+            "norm": {"scale": P(None)},
+            "block": block_spec(
+                cfg,
+                cfg.prefix_pattern[0] if cfg.prefix_pattern else cfg.block_pattern[0],
+            ),
+        }
+    return sp
+
+
+# ---------------------------------------------------------------------------
+# forward (train)
+# ---------------------------------------------------------------------------
+
+
+def _embed(params, tokens, cfg):
+    h = jnp.take(params["embed"]["emb"], tokens, axis=0)
+    if cfg.gemma_norm:
+        h = h * jnp.asarray(math.sqrt(cfg.d_model), h.dtype)
+    return batch_shard(h)
+
+
+def _logits(params, h, cfg):
+    w = (
+        params["embed"]["emb"].T
+        if cfg.tie_embeddings
+        else params["lm_head"]["w"]
+    )
+    logits = jnp.einsum("bsd,dv->bsv", h, w)
+    logits = softcap(logits, cfg.logit_softcap)
+    return shard(logits, batch_axes(), None, "model")
+
+
+def _scan_blocks(params, h, cfg, remat: bool, memory=None):
+    """Scan the repeating pattern over its stacked params (train/forward)."""
+    NR = cfg.n_repeats
+    if NR == 0:
+        return h
+
+    def body(h, xs):
+        for j, kind in enumerate(cfg.block_pattern):
+            bp = params["shared"] if kind == "shared_attn" else xs[f"b{j}"]
+            h, _ = block_apply(bp, h, cfg, kind, memory=memory)
+        h = shard(h, batch_axes(), None, None)
+        return h, None
+
+    policy = getattr(cfg, "remat", "full")
+    if not remat or policy == "none":
+        body_fn = body
+    elif policy == "dots":
+        body_fn = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    else:  # "full"
+        body_fn = jax.checkpoint(body)
+    if cfg.unroll_layers:  # roofline probe: count every repeat in HLO
+        for r in range(NR):
+            h, _ = body_fn(h, jax.tree.map(lambda a: a[r], params["blocks"]))
+        return h
+    h, _ = jax.lax.scan(body_fn, h, params["blocks"], length=NR)
+    return h
+
+
+def forward(params, tokens, cfg: ArchConfig, *, prefix_embeds=None, memory=None,
+            remat: bool = True):
+    """tokens: (B, S_text) int32; prefix_embeds: (B, S_mod, d) modality stub;
+    memory: (B, S_enc, d) encoder output (enc-dec archs)."""
+    h = _embed(params, tokens, cfg)
+    if prefix_embeds is not None:
+        h = jnp.concatenate([prefix_embeds.astype(h.dtype), h], axis=1)
+    for i, kind in enumerate(cfg.prefix_pattern):
+        h, _ = block_apply(params[f"prefix{i}"], h, cfg, kind, memory=memory)
+    h = _scan_blocks(params, h, cfg, remat, memory=memory)
+    h = rmsnorm(params["final_norm"], h, gemma_style=cfg.gemma_norm)
+    return _logits(params, h, cfg), h
+
+
+def encode(params, frames, cfg: ArchConfig):
+    """Encoder for enc-dec archs. frames: (B, S_enc, d) stub embeddings."""
+    enc = params["encoder"]
+    h = batch_shard(jnp.einsum("bsd,de->bse", frames, enc["in_proj"]["w"]))
+
+    def body(h, bp):
+        a, _ = A.gqa_apply(bp["attn"], rmsnorm(bp["ln1"], h), cfg, causal=False)
+        h = h + a
+        from .blocks import _mlp_apply
+
+        h = h + _mlp_apply(bp["mlp"], rmsnorm(bp["ln2"], h), cfg)
+        return shard(h, batch_axes(), None, None), None
+
+    h, _ = jax.lax.scan(body, h, enc["blocks"])
+    return rmsnorm(enc["norm"], h)
+
+
+def loss_fn(params, batch, cfg: ArchConfig):
+    """batch: dict(tokens, labels[, prefix_embeds, frames])."""
+    memory = None
+    if cfg.encoder_layers:
+        memory = encode(params, batch["frames"], cfg)
+    logits, h = forward(
+        params,
+        batch["tokens"],
+        cfg,
+        prefix_embeds=batch.get("prefix_embeds"),
+        memory=memory,
+    )
+    S_text = batch["tokens"].shape[1]
+    logits_text = logits[:, -S_text:]  # drop modality prefix positions
+    loss = cross_entropy(logits_text[:, :-1], batch["labels"][:, 1:])
+    if cfg.mtp_depth:
+        loss = loss + 0.3 * _mtp_loss(params, h[:, -S_text:], batch, cfg)
+    return loss
+
+
+def _mtp_loss(params, h, batch, cfg):
+    """DeepSeek-V3 multi-token prediction (depth 1): predict t+2 from the
+    main trunk state at t combined with the embedding of token t+1.
+
+    Runs at the full (padded) sequence length so the MTP block stays on the
+    chunked-attention path (an S-1-length sequence would fall back to full
+    S^2 score materialization); the ragged tail is masked out of the loss.
+    """
+    mtp = params["mtp"]
+    tokens = batch["tokens"]
+    # token t+1 stream, padded at the end to keep length S
+    next_tokens = jnp.concatenate(
+        [tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], axis=1
+    )
+    emb_next = _embed(params, next_tokens, cfg)  # (B, S, d)
+    x = jnp.concatenate([rmsnorm(mtp["norm"], h), emb_next], axis=-1)
+    x = jnp.einsum("bsd,de->bse", x, mtp["proj"]["w"])
+    kind = cfg.prefix_pattern[0] if cfg.prefix_pattern else cfg.block_pattern[0]
+    x, _ = block_apply(mtp["block"], x, cfg, kind)
+    logits = _logits(params, x, cfg)  # position t predicts token t+2
+    S = tokens.shape[1]
+    mask = (jnp.arange(S) < S - 2).astype(jnp.float32)[None, :]
+    labels_t2 = jnp.concatenate(
+        [batch["labels"][:, 2:], jnp.zeros_like(batch["labels"][:, :2])], axis=1
+    )
+    return cross_entropy(logits, labels_t2, mask=mask * jnp.ones_like(labels_t2, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+class Caches(NamedTuple):
+    prefix: tuple  # per prefix block
+    blocks: dict  # {f"b{j}": stacked (NR, ...) caches}
+    mtp: Any = None
+
+
+def init_caches(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    prefix = tuple(
+        init_cache(cfg, kind, batch, max_len, dtype) for kind in cfg.prefix_pattern
+    )
+    NR = cfg.n_repeats
+
+    def stack(kind):
+        one = init_cache(cfg, kind, batch, max_len, dtype)
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (NR,) + a.shape), one)
+
+    blocks = {f"b{j}": stack(kind) for j, kind in enumerate(cfg.block_pattern)}
+    return Caches(prefix=prefix, blocks=blocks)
+
+
+def cache_specs(cfg: ArchConfig):
+    """PartitionSpecs for caches: batch over data axes, heads over model."""
+
+    def spec_for(kind, stacked: bool):
+        lead = (None,) if stacked else ()
+
+        def kv(a_ndim):
+            # (B, S, H, dh) or recurrent (B, H, dk, dv) / (B, H, dk)
+            if a_ndim == 4:
+                return P(*lead, batch_axes_static(), None, "model", None)
+            if a_ndim == 3:
+                return P(*lead, batch_axes_static(), None, "model")
+            if a_ndim == 2:
+                return P(*lead, batch_axes_static(), None)
+            return P(*lead)
+
+        return kv
+
+    return spec_for  # resolved leaf-wise in launch/dryrun.py
+
+
+def batch_axes_static():
+    return ("pod", "data")
+
+
+def prefill(params, tokens, cfg: ArchConfig, max_len: int, *,
+            prefix_embeds=None, memory=None):
+    """Run the full prompt, materializing decode caches at max_len capacity.
+
+    Returns (last_token_logits, Caches).  The prefill KV (prompt length S)
+    is written into the front of the max_len cache buffers.
+    """
+    h = _embed(params, tokens, cfg)
+    if prefix_embeds is not None:
+        h = jnp.concatenate([prefix_embeds.astype(h.dtype), h], axis=1)
+    B, S = h.shape[0], h.shape[1]
+    prefix_caches = []
+    for i, kind in enumerate(cfg.prefix_pattern):
+        h, c = block_apply(params[f"prefix{i}"], h, cfg, kind, memory=memory)
+        prefix_caches.append(_grow_cache(c, cfg, kind, max_len))
+
+    def body(h, xs):
+        caches = {}
+        for j, kind in enumerate(cfg.block_pattern):
+            bp = params["shared"] if kind == "shared_attn" else xs[f"b{j}"]
+            h, c = block_apply(bp, h, cfg, kind, memory=memory)
+            caches[f"b{j}"] = _grow_cache(c, cfg, kind, max_len)
+        h = shard(h, batch_axes(), None, None)
+        return h, caches
+
+    if cfg.unroll_layers:  # roofline probe: count every repeat in HLO
+        outs = []
+        for r in range(cfg.n_repeats):
+            h, c = body(h, jax.tree.map(lambda a: a[r], params["blocks"]))
+            outs.append(c)
+        blk_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    else:
+        h, blk_caches = jax.lax.scan(body, h, params["blocks"],
+                                     length=cfg.n_repeats)
+    h = rmsnorm(params["final_norm"], h, gemma_style=cfg.gemma_norm)
+    logits = _logits(params, h[:, -1:], cfg)
+    return logits[:, 0], Caches(prefix=tuple(prefix_caches), blocks=blk_caches)
+
+
+def _grow_cache(c, cfg, kind, max_len: int):
+    """Embed a prefill cache (length S) into max_len-capacity buffers."""
+    if isinstance(c, A.KVCache):
+        S = c.k.shape[1]
+        window = None
+        if kind in ("attn_local",) or (kind in ("attn", "moe") and cfg.sliding_window):
+            window = cfg.sliding_window
+        cap = min(max_len, window) if window else max_len
+        if S >= cap:
+            return A.KVCache(c.k[:, -cap:], c.v[:, -cap:], c.length)
+        pad = [(0, 0), (0, cap - S), (0, 0), (0, 0)]
+        return A.KVCache(jnp.pad(c.k, pad), jnp.pad(c.v, pad), c.length)
+    if isinstance(c, A.MLACache):
+        S = c.ckv.shape[1]
+        if S >= max_len:
+            return c
+        return A.MLACache(
+            jnp.pad(c.ckv, [(0, 0), (0, max_len - S), (0, 0)]),
+            jnp.pad(c.krope, [(0, 0), (0, max_len - S), (0, 0)]),
+            c.length,
+        )
+    return c  # recurrent states are O(1)
+
+
+def decode_step(params, token, caches: Caches, cfg: ArchConfig, *, memory=None):
+    """token: (B, 1) int32 -> (logits (B, vocab), updated caches)."""
+    h = _embed(params, token, cfg)
+    new_prefix = []
+    for i, kind in enumerate(cfg.prefix_pattern):
+        h, c = block_decode(params[f"prefix{i}"], h, caches.prefix[i], cfg, kind,
+                            memory=memory)
+        new_prefix.append(c)
+
+    def body(h, xs):
+        blk_params, blk_caches = xs
+        new = {}
+        for j, kind in enumerate(cfg.block_pattern):
+            bp = params["shared"] if kind == "shared_attn" else blk_params[f"b{j}"]
+            h, c = block_decode(bp, h, blk_caches[f"b{j}"], cfg, kind, memory=memory)
+            new[f"b{j}"] = c
+        return h, new
+
+    h, new_blocks = jax.lax.scan(
+        body, h, (params["blocks"], caches.blocks), length=cfg.n_repeats
+    )
+    h = rmsnorm(params["final_norm"], h, gemma_style=cfg.gemma_norm)
+    logits = _logits(params, h, cfg)
+    return logits[:, 0], Caches(prefix=tuple(new_prefix), blocks=new_blocks)

@@ -1,0 +1,11 @@
+"""Optimizer substrate: sharded AdamW, schedules, gradient compression."""
+from .adamw import (  # noqa: F401
+    AdamWConfig,
+    OptState,
+    apply_updates,
+    global_norm_clip,
+    init_opt,
+    opt_specs,
+    warmup_cosine,
+)
+from .compress import compress_grads, init_residual  # noqa: F401

@@ -1,0 +1,136 @@
+"""AdamW with sharded states, global-norm clipping, and warmup-cosine LR.
+
+Optimizer state mirrors the parameter pytree (m, v in f32), so the same
+PartitionSpecs shard optimizer memory — ZeRO-style, no extra machinery.
+Optionally the second moment is kept in int8 with per-tensor scale
+(``quantized_v=True``) to fit very large models (used by the deepseek-v3
+config at 512 chips; DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "OptState", "init_opt", "opt_specs", "apply_updates",
+           "warmup_cosine", "global_norm_clip"]
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    quantized_v: bool = False  # int8 second moment (large-model memory)
+    quantized_m: bool = False  # int8 first moment (8-bit-Adam style;
+    # required to fit deepseek-v3 optimizer state on the 256-chip pod)
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any  # f32, mirrors params
+    v: Any  # f32 or (int8, scale) pairs
+
+
+def _q_zeros(p):
+    return {"q": jnp.zeros(p.shape, jnp.int8), "scale": jnp.ones((), jnp.float32)}
+
+
+def init_opt(params, cfg: AdamWConfig) -> OptState:
+    if cfg.quantized_m:
+        m = jax.tree.map(_q_zeros, params)
+    else:
+        m = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    if cfg.quantized_v:
+        v = jax.tree.map(_q_zeros, params)
+    else:
+        v = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(step=jnp.zeros((), jnp.int32), m=m, v=v)
+
+
+def opt_specs(param_specs, cfg: AdamWConfig):
+    """Optimizer-state PartitionSpecs mirror the parameter specs."""
+    from jax.sharding import PartitionSpec as P
+
+    is_spec = lambda x: isinstance(x, P)
+    q = lambda t: jax.tree.map(lambda s: {"q": s, "scale": P()}, t, is_leaf=is_spec)
+    m = q(param_specs) if cfg.quantized_m else param_specs
+    v = q(param_specs) if cfg.quantized_v else param_specs
+    return OptState(step=P(), m=m, v=v)
+
+
+def warmup_cosine(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    return cfg.lr_peak * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+
+
+def global_norm_clip(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gn
+
+
+def _vq_decode(vq):
+    return vq["q"].astype(jnp.float32) * vq["scale"]
+
+
+def _vq_encode(v):
+    scale = jnp.maximum(jnp.max(jnp.abs(v)) / 127.0, 1e-12)
+    return {"q": jnp.round(v / scale).astype(jnp.int8), "scale": scale}
+
+
+def apply_updates(params, grads, opt: OptState, cfg: AdamWConfig):
+    """One AdamW step. Returns (new_params, new_opt, metrics)."""
+    grads, gnorm = global_norm_clip(grads, cfg.clip_norm)
+    step = opt.step + 1
+    lr = warmup_cosine(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        if not jnp.issubdtype(p.dtype, jnp.inexact):
+            return p, m, v  # structural (index) params: never updated
+        g = g.astype(jnp.float32)
+        m_f = _vq_decode(m) if cfg.quantized_m else m
+        m_f = cfg.b1 * m_f + (1 - cfg.b1) * g
+        v_f = _vq_decode(v) if cfg.quantized_v else v
+        v_f = cfg.b2 * v_f + (1 - cfg.b2) * g * g
+        update = (m_f / b1c) / (jnp.sqrt(v_f / b2c) + cfg.eps)
+        update = update + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * update).astype(p.dtype)
+        m_new = _vq_encode(m_f) if cfg.quantized_m else m_f
+        v_new = _vq_encode(v_f) if cfg.quantized_v else v_f
+        return p_new, m_new, v_new
+
+    is_vq = lambda x: isinstance(x, dict) and set(x) == {"q", "scale"}
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.flatten(opt.m, is_leaf=is_vq)[0] if cfg.quantized_m else (
+        jax.tree.leaves(opt.m)
+    )
+    flat_v = jax.tree.flatten(opt.v, is_leaf=is_vq)[0] if cfg.quantized_v else (
+        jax.tree.leaves(opt.v)
+    )
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, OptState(step=step, m=new_m, v=new_v), {
+        "grad_norm": gnorm,
+        "lr": lr,
+    }

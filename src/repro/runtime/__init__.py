@@ -1,0 +1,4 @@
+"""Distributed runtime: checkpointing, fault tolerance, elastic rescaling."""
+from .checkpoint import latest_step, restore_checkpoint, save_checkpoint  # noqa: F401
+from .elastic import RescalePlan, make_shardings, rescale_mesh_shape  # noqa: F401
+from .fault import FaultEvent, HealthMonitor, RestartPolicy  # noqa: F401

@@ -1,0 +1,98 @@
+"""Elastic rescaling: continue a run on a different device count.
+
+Because checkpoints store full (unsharded) leaves (runtime/checkpoint.py) and
+all shardings derive from PartitionSpecs over named mesh axes, rescaling is:
+
+  1. pick the new mesh shape (drop failed hosts; keep axes' semantics),
+  2. rebuild NamedShardings from the *same* PartitionSpec trees,
+  3. restore the checkpoint with the new shardings,
+  4. keep the global batch constant by scaling per-device batch
+     (global_batch = per_device_batch * data_parallel_size must re-divide).
+
+tests/test_fault.py asserts train-loss trajectories match bit-for-bit across
+a mid-run 8->4 device rescale on CPU (same global batch, same data order).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+from jax.sharding import NamedSharding
+
+__all__ = ["rescale_mesh_shape", "make_shardings", "RescalePlan"]
+
+
+@dataclass(frozen=True)
+class RescalePlan:
+    old_shape: tuple
+    new_shape: tuple
+    axis_names: tuple
+    reason: str = ""
+
+
+def rescale_mesh_shape(n_devices: int, axis_names=("data", "model"),
+                       model_parallel: int | None = None) -> tuple:
+    """Largest usable mesh for n_devices: keep model parallelism fixed (it is
+    dictated by per-chip memory), shrink the data axis; drop remainder
+    devices (they become hot spares)."""
+    if model_parallel is None:
+        model_parallel = 1
+    data = max(1, n_devices // model_parallel)
+    if len(axis_names) == 3:  # (pod, data, model): collapse pods on rescale
+        return (1, data, model_parallel)
+    return (data, model_parallel)
+
+
+def make_shardings(mesh, spec_tree):
+    """PartitionSpec tree -> NamedSharding tree on the given mesh."""
+    from jax.sharding import PartitionSpec as P
+
+    def conv(s):
+        # drop axis names the mesh doesn't have (e.g. "pod" on single-pod)
+        cleaned = []
+        for entry in tuple(s):
+            if entry is None:
+                cleaned.append(None)
+            elif isinstance(entry, (tuple, list)):
+                kept = tuple(a for a in entry if a in mesh.axis_names)
+                cleaned.append(kept if kept else None)
+            else:
+                cleaned.append(entry if entry in mesh.axis_names else None)
+        return NamedSharding(mesh, P(*cleaned))
+
+    return jax.tree.map(conv, spec_tree,
+                        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+
+
+def sanitize_shardings(sh_tree, aval_tree):
+    """Drop spec entries whose mesh extent does not divide the dimension.
+
+    pjit in_shardings require exact divisibility (unlike constraints): e.g.
+    xlstm's 4-head gate projections cannot shard 4 over a 16-way model axis,
+    and batch=1 long-context cells cannot shard batch over data.  Replaces
+    such entries with None (replicated on that dim).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    def fix(sh, aval):
+        if sh is None or not hasattr(sh, "spec"):
+            return sh
+        mesh = sh.mesh
+        sizes = dict(mesh.shape)
+        spec = tuple(sh.spec)
+        shape = aval.shape
+        out = []
+        for i, entry in enumerate(spec):
+            if entry is None or i >= len(shape):
+                out.append(None if i >= len(shape) else entry)
+                continue
+            axes = entry if isinstance(entry, (tuple, list)) else (entry,)
+            extent = 1
+            for a in axes:
+                extent *= sizes.get(a, 1)
+            out.append(entry if extent and shape[i] % extent == 0 else None)
+        out = out[: len(shape)]
+        return NamedSharding(mesh, P(*out))
+
+    return jax.tree.map(fix, sh_tree, aval_tree,
+                        is_leaf=lambda x: hasattr(x, "spec") or x is None)

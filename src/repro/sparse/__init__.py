@@ -1,0 +1,9 @@
+"""SparseP as a first-class LM feature: block-sparse layers + MoE dispatch."""
+from .layers import (  # noqa: F401
+    block_sparse_ffn_apply,
+    block_sparse_ffn_init,
+    block_sparse_ffn_spec,
+    sparse_linear_apply,
+    sparse_linear_init,
+    sparse_linear_spec,
+)

@@ -1,0 +1,107 @@
+"""SparsePLinear / BlockSparseFFN — the paper's formats as LM weight layers.
+
+A BlockSparseFFN stores its three SwiGLU projections as *block-sparse* BCOO
+weights at ``cfg.ffn_density`` with MXU-aligned blocks (cfg.sparse_block).
+The forward pass is the paper's BCSR/BCOO SpMM (kernels/bcsr_spmv.py on TPU;
+kernels/ref.py everywhere) — activations are the dense "input vector" batch.
+
+The sparsity *pattern* is static per layer (sampled at init, balanced across
+block-rows so the paper's block balancing is trivially perfect — an LM weight
+matrix is ours to lay out, unlike an input matrix; this is the "design
+compressed data structures that partition well" recommendation, Rec. #2,
+applied at model-design time).
+
+Weights are stored densely per nonzero block: (nblocks, r, c) + block index
+arrays — exactly the paper's BCOO (Fig. 2e).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels import ref as kref
+
+__all__ = [
+    "sparse_linear_init",
+    "sparse_linear_spec",
+    "sparse_linear_apply",
+    "block_sparse_ffn_init",
+    "block_sparse_ffn_spec",
+    "block_sparse_ffn_apply",
+]
+
+
+def _balanced_pattern(brows: int, bcols: int, density: float, seed: int = 17):
+    """Block mask with an equal number of blocks per block-row (perfect block
+    balance across partitions — paper Rec. #2).  Static (numpy, fixed seed):
+    the sparsity PATTERN is an architecture decision shared by all layers;
+    only the block values are learned/random per layer — and a static pattern
+    keeps init vmappable for the stacked layer scan."""
+    per_row = max(1, int(round(bcols * density)))
+    rng = np.random.default_rng(seed)
+    rows = [np.sort(rng.choice(bcols, per_row, replace=False)) for _ in range(brows)]
+    browind = np.repeat(np.arange(brows, dtype=np.int32), per_row)
+    bcolind = np.concatenate(rows).astype(np.int32)
+    return browind, bcolind
+
+
+def sparse_linear_init(key, d_in: int, d_out: int, density: float,
+                       block=(8, 128), dtype=jnp.bfloat16):
+    """BCOO weight W (d_out x d_in) so y = W @ x maps to the paper's SpMV
+    with x = activations. Stored transposed-for-SpMM: blocks index (out, in).
+    """
+    r, c = block
+    assert d_out % r == 0 and d_in % c == 0, (d_in, d_out, block)
+    browind, bcolind = _balanced_pattern(d_out // r, d_in // c, density)
+    nb = len(browind)
+    scale = 1.0 / math.sqrt(d_in * density)
+    bvalues = jax.random.normal(key, (nb, r, c), dtype) * jnp.asarray(scale, dtype)
+    return {
+        "browind": jnp.asarray(browind),
+        "bcolind": jnp.asarray(bcolind),
+        "bvalues": bvalues,
+    }
+
+
+def sparse_linear_spec():
+    # block stream sharded over the model axis (the 1D nnz-balanced layout:
+    # equal blocks per device since the pattern is row-balanced)
+    return {"browind": P("model"), "bcolind": P("model"), "bvalues": P("model", None, None)}
+
+
+def sparse_linear_apply(p, x, d_out: int):
+    """y = W @ x for activations x (..., d_in) -> (..., d_out)."""
+    lead = x.shape[:-1]
+    xt = x.reshape(-1, x.shape[-1]).T  # (d_in, T) — SpMM batch on the right
+    y = kref.bcoo_spmv_ref(
+        p["browind"], p["bcolind"], p["bvalues"], xt, d_out
+    )  # (d_out, T)
+    return y.T.reshape(lead + (d_out,)).astype(x.dtype)
+
+
+def block_sparse_ffn_init(key, cfg, dtype=jnp.bfloat16):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d, f, dens, blk = cfg.d_model, cfg.d_ff, cfg.ffn_density, cfg.sparse_block
+    return {
+        "w_gate": sparse_linear_init(k1, d, f, dens, blk, dtype),
+        "w_up": sparse_linear_init(k2, d, f, dens, blk, dtype),
+        "w_down": sparse_linear_init(k3, f, d, dens, blk, dtype),
+    }
+
+
+def block_sparse_ffn_spec(cfg):
+    return {
+        "w_gate": sparse_linear_spec(),
+        "w_up": sparse_linear_spec(),
+        "w_down": sparse_linear_spec(),
+    }
+
+
+def block_sparse_ffn_apply(p, x, cfg):
+    h = jax.nn.silu(sparse_linear_apply(p["w_gate"], x, cfg.d_ff))
+    h = h * sparse_linear_apply(p["w_up"], x, cfg.d_ff)
+    return sparse_linear_apply(p["w_down"], h, cfg.d_model)

@@ -1,0 +1,66 @@
+"""Adaptive scheme selection (paper Rec. #3 / Obs. 15-18) + data generators."""
+import numpy as np
+
+from repro.core.adaptive import HardwareModel, estimate_time, select_scheme
+from repro.core.stats import compute_stats
+from repro.data import (
+    MatrixSpec,
+    block_matrix,
+    paper_large_suite,
+    paper_small_suite,
+    regular_matrix,
+    scale_free_matrix,
+)
+
+HW = HardwareModel(chips=256)
+
+
+def test_scale_free_selects_1d_nnz():
+    a = scale_free_matrix(512, 512, 6 * 512, seed=1)
+    st = compute_stats(a)
+    assert st.is_scale_free
+    plan = select_scheme(st, HW)
+    assert plan.partitioning == "1d" and plan.scheme == "nnz"
+
+
+def test_regular_selects_2d_equally_sized():
+    a = regular_matrix(512, 512, nnz_per_row=5, seed=2)
+    st = compute_stats(a)
+    assert st.is_regular
+    plan = select_scheme(st, HW)
+    assert plan.partitioning == "2d" and plan.scheme == "equally-sized"
+
+
+def test_block_pattern_selects_block_format():
+    a = block_matrix(256, 256, block=(8, 16), block_density=0.2, seed=3)
+    st = compute_stats(a, block=(8, 16))
+    assert st.is_block_pattern
+    plan = select_scheme(st, HW)
+    assert plan.fmt == "bcoo"
+
+
+def test_estimate_time_positive():
+    a = regular_matrix(256, 256, 5, seed=4)
+    st = compute_stats(a)
+    plan = select_scheme(st, HW)
+    t = estimate_time(st, plan, HW)
+    assert all(v >= 0 for v in t.values())
+    assert t["kernel_s"] > 0
+
+
+def test_suites_cover_paper_classes():
+    small, large = paper_small_suite(), paper_large_suite()
+    assert len(small) == 4 and len(large) == 22  # Tables 3 and 4
+    classes = {s.cls for s in large}
+    assert classes == {"regular", "scale-free", "block"}
+    # generators produce the advertised statistics
+    sf_specs = [s for s in large if s.cls == "scale-free"]
+    a = sf_specs[0].build()
+    assert compute_stats(a).nnz_r_std > compute_stats(
+        [s for s in large if s.cls == "regular"][0].build()).nnz_r_std
+
+
+def test_scale_free_generator_has_dense_rows():
+    a = scale_free_matrix(512, 512, 6 * 512, seed=9)
+    row_nnz = (a != 0).sum(1)
+    assert row_nnz.max() > 10 * max(row_nnz.mean(), 1)

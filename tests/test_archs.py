@@ -1,0 +1,126 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, asserting output shapes + no NaNs (deliverable f), plus prefill/decode
+consistency for every family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_configs
+from repro.models import lm
+
+ARCHS = list_configs()
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 32
+
+
+def _batch(cfg, seq=S):
+    tokens = jax.random.randint(KEY, (B, seq), 0, cfg.vocab)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.encoder_layers:
+        batch["frames"] = jax.random.normal(KEY, (B, seq, cfg.d_model), jnp.float32)
+    if cfg.modality_tokens:
+        batch["prefix_embeds"] = jax.random.normal(
+            KEY, (B, cfg.modality_tokens, cfg.d_model), jnp.float32)
+    return batch
+
+
+def test_all_ten_archs_registered():
+    assert len(ARCHS) == 10
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    expected = {
+        "llama3.2-1b": (16, 2048, 32, 8, 8192, 128256),
+        "qwen1.5-0.5b": (24, 1024, 16, 16, 2816, 151936),
+        "gemma2-27b": (46, 4608, 32, 16, 36864, 256000),
+        "smollm-360m": (32, 960, 15, 5, 2560, 49152),
+        "deepseek-v3-671b": (61, 7168, 128, 128, 18432, 129280),
+        "mixtral-8x22b": (56, 6144, 48, 8, 16384, 32768),
+        "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+        "seamless-m4t-medium": (12, 1024, 16, 16, 4096, 256206),
+        "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+        "llava-next-34b": (60, 7168, 56, 8, 20480, 64000),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff,
+           cfg.vocab)
+    assert got == expected
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_loss(arch):
+    cfg = get_config(arch).reduced()
+    params = lm.init_params(KEY, cfg, jnp.float32)
+    batch = _batch(cfg)
+    memory = lm.encode(params, batch["frames"], cfg) if cfg.encoder_layers else None
+    logits, h = lm.forward(params, batch["tokens"], cfg,
+                           prefix_embeds=batch.get("prefix_embeds"),
+                           memory=memory)
+    S_total = S + cfg.modality_tokens
+    assert logits.shape == (B, S_total, cfg.vocab)
+    assert h.shape == (B, S_total, cfg.d_model)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+    loss = lm.loss_fn(params, batch, cfg)
+    assert np.isfinite(float(loss))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    from repro.launch.steps import make_train_step
+    from repro.optim import AdamWConfig, init_opt
+
+    cfg = get_config(arch).reduced()
+    opt_cfg = AdamWConfig(lr_peak=1e-3, warmup_steps=1, total_steps=10)
+    params = lm.init_params(KEY, cfg, jnp.float32)
+    opt = init_opt(params, opt_cfg)
+    step = jax.jit(make_train_step(cfg, opt_cfg))
+    batch = _batch(cfg)
+    params2, opt2, metrics = step(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(opt2.step) == 1
+    # parameters actually moved
+    delta = max(float(jnp.abs(a - b).max())
+                for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2)))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_consistency(arch):
+    """decode(prefill(S)) last logits == prefill(S+1) last logits."""
+    from dataclasses import replace
+
+    cfg = get_config(arch).reduced()
+    if cfg.n_experts:  # exactness needs ample capacity (no token drops)
+        cfg = replace(cfg, moe_capacity_factor=8.0)
+    params = lm.init_params(KEY, cfg, jnp.float32)
+    batch = _batch(cfg, seq=16)
+    tokens = batch["tokens"][:, :16]
+    memory = lm.encode(params, batch["frames"][:, :16], cfg) if cfg.encoder_layers else None
+    pe = batch.get("prefix_embeds")
+    _, caches = lm.prefill(params, tokens, cfg, 32, prefix_embeds=pe, memory=memory)
+    nxt = jnp.zeros((B, 1), jnp.int32)
+    got, _ = lm.decode_step(params, nxt, caches, cfg, memory=memory)
+    want, _ = lm.prefill(params, jnp.concatenate([tokens, nxt], 1), cfg, 32,
+                         prefix_embeds=pe, memory=memory)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_param_specs_cover_params():
+    """Every param leaf has a matching PartitionSpec leaf (tree congruence)."""
+    for arch in ARCHS:
+        cfg = get_config(arch).reduced()
+        params = jax.eval_shape(lambda c=cfg: lm.init_params(KEY, c))
+        specs = lm.param_specs(cfg)
+        pl = jax.tree.structure(params)
+        sl = jax.tree.structure(
+            specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+        assert pl == sl, f"{arch}: spec tree != param tree"
+
+
+def test_active_params_moe():
+    cfg = get_config("deepseek-v3-671b")
+    assert cfg.n_params > 6e11  # ~671B
+    assert 3e10 < cfg.active_params() < 6e10  # ~37B active

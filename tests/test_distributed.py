@@ -1,0 +1,39 @@
+"""Distributed SpMV over 8 fake devices (hermetic subprocess — the forced
+device count must be set before jax initializes, which pytest's process
+already did with 1 device)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def dist_output():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tests", "_distributed_runner.py")],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    return proc.stdout
+
+
+def test_all_schemes_pass(dist_output):
+    assert "DISTRIBUTED DONE" in dist_output
+    assert "FAIL" not in dist_output
+
+
+@pytest.mark.parametrize("line", [
+    "1D coo.rows: OK", "1D coo.nnz-rgrn: OK", "1D coo.nnz: OK",
+    "1D bcoo.nnz: OK",
+    "2D equally-sized.psum: OK", "2D equally-sized.psum_scatter: OK",
+    "2D equally-wide.global: OK", "2D variable-sized.global: OK",
+    "1D ring: OK", "1D spmm: OK",
+])
+def test_scheme(dist_output, line):
+    assert line in dist_output

@@ -1,0 +1,55 @@
+"""Dry-run plumbing test: lower+compile a reduced cell on 8 fake devices in a
+hermetic subprocess (the real 512-device sweep is experiments/, not CI)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+CODE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses
+import jax
+import jax.numpy as jnp
+from repro.configs import get_config
+from repro.launch import steps as S
+from repro.launch.dryrun import lower_cell, _opt_cfg
+from repro.analysis import roofline as R
+
+mesh = jax.make_mesh((4, 2), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+for arch in ("llama3.2-1b", "mixtral-8x22b", "xlstm-1.3b"):
+    cfg = dataclasses.replace(
+        get_config(arch).reduced(),
+        # 3 repeats so scan + probe paths both engage
+        n_layers=len(get_config(arch).reduced().prefix_pattern)
+        + 3 * len(get_config(arch).reduced().block_pattern),
+    )
+    for shape in ("train_4k",):
+        # shrink the shape grid via monkeypatched SHAPES? use the real one
+        # but reduced dims keep it small: global_batch 256 x seq 4096 of a
+        # 64-dim model on 8 fake devices compiles in seconds.
+        lowered, compiled = lower_cell(cfg, shape, mesh, microbatches=1)
+        mem = compiled.memory_analysis()
+        ca = compiled.cost_analysis()
+        coll = R.collective_bytes(compiled.as_text())
+        assert mem.temp_size_in_bytes > 0
+        assert ca.get("flops", 0) > 0
+        print(f"CELL_OK {arch} {shape} coll={coll['total']}")
+print("DRYRUN_PLUMBING_OK")
+"""
+
+
+@pytest.mark.slow
+def test_dryrun_cell_reduced():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", CODE], capture_output=True,
+                          text=True, env=env, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "DRYRUN_PLUMBING_OK" in proc.stdout
+    assert proc.stdout.count("CELL_OK") == 3

