@@ -1,0 +1,87 @@
+"""Steady-state serving throughput: engine vs one-shot SpMV.
+
+Measures requests/sec for three request paths on the paper_small_suite
+matrix classes:
+
+  * one-shot   — the pre-engine pipeline: stats + partition + place + trace
+                 on EVERY request (what examples/spmv_end_to_end.py does),
+  * engine     — SpmvEngine steady state: cached plan, one vector per call,
+  * engine+B   — the micro-batched path: B requests coalesced into one SpMM.
+
+Prints the usual ``name,us_per_call,derived`` CSV rows plus the Fig.-17-style
+load/kernel/retrieve split the telemetry records for each matrix.
+
+    PYTHONPATH=src python benchmarks/engine_throughput.py [--batch 8] [--iters 20]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import header, row
+from repro.data.matrices import paper_small_suite
+from repro.engine import SpmvEngine
+
+
+def one_shot(a: np.ndarray, x: np.ndarray) -> np.ndarray:
+    """The full per-request pipeline the engine exists to amortize."""
+    eng = SpmvEngine(cache_capacity=1)  # fresh: no reuse across requests
+    eng.register("m", a, warmup=False)
+    return eng.multiply("m", x)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--iters", type=int, default=20)
+    ap.add_argument("--oneshot-iters", type=int, default=3)
+    args = ap.parse_args(argv)
+
+    header("engine_throughput (requests/sec; higher is better)")
+    eng = SpmvEngine(cache_capacity=16)
+    rng = np.random.default_rng(0)
+
+    for spec in paper_small_suite():
+        a = spec.build()
+        x = rng.standard_normal(a.shape[1]).astype(np.float32)
+        X = rng.standard_normal((a.shape[1], args.batch)).astype(np.float32)
+        entry = eng.register(spec.name, a)
+        eng.multiply(spec.name, X)  # warm the batched shape too
+
+        t0 = time.perf_counter()
+        for _ in range(args.oneshot_iters):
+            one_shot(a, x)
+        oneshot_rps = args.oneshot_iters / (time.perf_counter() - t0)
+
+        t0 = time.perf_counter()
+        for _ in range(args.iters):
+            eng.multiply(spec.name, x)
+        engine_rps = args.iters / (time.perf_counter() - t0)
+
+        t0 = time.perf_counter()
+        for _ in range(args.iters):
+            eng.multiply(spec.name, X)
+        batched_rps = args.iters * args.batch / (time.perf_counter() - t0)
+
+        plan = f"{entry.plan.partitioning}.{entry.plan.scheme}.{entry.plan.fmt}"
+        row(f"oneshot.{spec.name}", 1e6 / oneshot_rps, f"rps={oneshot_rps:.1f}")
+        row(f"engine.{spec.name}", 1e6 / engine_rps,
+            f"rps={engine_rps:.1f} plan={plan} x{engine_rps / oneshot_rps:.0f}")
+        row(f"engine.b{args.batch}.{spec.name}", 1e6 / batched_rps,
+            f"rps={batched_rps:.1f} x{batched_rps / oneshot_rps:.0f}")
+
+    header("fig17-style request breakdown (fractions of request time)")
+    for spec in paper_small_suite():
+        bd = eng.telemetry.breakdown(spec.name)
+        print(f"{spec.name}: load={bd['load']:.2f} kernel={bd['kernel']:.2f} "
+              f"retrieve={bd['retrieve']:.2f} requests={bd['requests']} "
+              f"vectors={bd['vectors']} traces={bd['traces']}")
+    st = eng.cache.stats
+    print(f"# cache: hits={st.hits} misses={st.misses} evictions={st.evictions} "
+          f"hit_rate={st.hit_rate:.3f}")
+
+
+if __name__ == "__main__":
+    main()

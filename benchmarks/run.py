@@ -28,19 +28,20 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import time
 import numpy as np, jax, jax.numpy as jnp
+from repro import compat
+from repro.compat import P
 from repro.core.partition import partition_1d, partition_2d
 from repro.core import distributed as D
 from repro.data import paper_large_suite
 
-AX = (jax.sharding.AxisType.Auto,)
-mesh1 = jax.make_mesh((8,), ("data",), axis_types=AX)
-mesh2 = jax.make_mesh((4, 2), ("data", "model"), axis_types=AX * 2)
+mesh1 = compat.make_mesh((8,), ("data",))
+mesh2 = compat.make_mesh((4, 2), ("data", "model"))
 for spec in paper_large_suite(1)[:4] + paper_large_suite(1)[-3:]:
     a = spec.build()
     x = np.random.default_rng(0).standard_normal(a.shape[1]).astype(np.float32)
     part = partition_1d(a, 8, fmt="coo", balance="nnz")
     arrs = D.place_1d(part, mesh1, "data")
-    xs = jax.device_put(jnp.asarray(x), jax.NamedSharding(mesh1, jax.P("data")))
+    xs = jax.device_put(jnp.asarray(x), jax.NamedSharding(mesh1, P("data")))
     fn = D.spmv_1d(part, mesh1, "data")
     jax.block_until_ready(fn.jitted(arrs, xs))
     ts = []
@@ -50,7 +51,7 @@ for spec in paper_large_suite(1)[:4] + paper_large_suite(1)[-3:]:
     print(f"dist.{spec.name}.1D.coo.nnz,{np.median(ts)*1e6:.1f},parts=8")
     part = partition_2d(a, (4, 2), fmt="coo", scheme="equally-sized")
     arrs = D.place_2d(part, mesh2, ("data", "model"))
-    xs = jax.device_put(jnp.asarray(x), jax.NamedSharding(mesh2, jax.P("model")))
+    xs = jax.device_put(jnp.asarray(x), jax.NamedSharding(mesh2, P("model")))
     fn = D.spmv_2d(part, mesh2, ("data", "model"), merge="psum_scatter")
     jax.block_until_ready(fn.jitted(arrs, xs))
     ts = []

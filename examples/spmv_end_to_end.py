@@ -14,6 +14,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+from repro.compat import P
 from repro.core import distributed as D
 from repro.core.partition import partition_1d, partition_2d
 from repro.core.stats import compute_stats
@@ -21,8 +23,6 @@ from repro.data import paper_large_suite
 
 n_dev = len(jax.devices())
 print(f"devices: {n_dev}")
-AX = (jax.sharding.AxisType.Auto,)
-
 spec = paper_large_suite(1)[11]  # web-Google miniature (scale-free)
 a = spec.build()
 st = compute_stats(a)
@@ -32,10 +32,10 @@ print(f"{spec.name}: {st.rows}x{st.cols} nnz={st.nnz} "
       f"({'scale-free' if st.is_scale_free else 'regular'})")
 
 # ---- 1D: broadcast x (all-gather), element-granular nnz balance ------------
-mesh = jax.make_mesh((n_dev,), ("data",), axis_types=AX)
+mesh = compat.make_mesh((n_dev,), ("data",))
 part = partition_1d(a, n_dev, fmt="coo", balance="nnz")
 arrs = D.place_1d(part, mesh, "data")
-xs = jax.device_put(jnp.asarray(x), jax.NamedSharding(mesh, jax.P("data")))
+xs = jax.device_put(jnp.asarray(x), jax.NamedSharding(mesh, P("data")))
 out = D.spmv_1d(part, mesh, "data")(arrs, xs)
 err = np.abs(D.assemble_rows(out) - y_ref).max()
 print(f"1D COO.nnz     pad_eff={part.padding_efficiency:.3f} max|err|={err:.2e}")
@@ -49,10 +49,10 @@ print(f"1D ring        overlapped broadcast        max|err|={err:.2e}")
 
 # ---- 2D equally-sized: sharded x, in-network merge (psum_scatter) ----------
 R, C = n_dev // 2, 2
-mesh2 = jax.make_mesh((R, C), ("data", "model"), axis_types=AX * 2)
+mesh2 = compat.make_mesh((R, C), ("data", "model"))
 part2 = partition_2d(a, (R, C), fmt="coo", scheme="equally-sized")
 arrs2 = D.place_2d(part2, mesh2, ("data", "model"))
-xs2 = jax.device_put(jnp.asarray(x), jax.NamedSharding(mesh2, jax.P("model")))
+xs2 = jax.device_put(jnp.asarray(x), jax.NamedSharding(mesh2, P("model")))
 out2 = D.spmv_2d(part2, mesh2, ("data", "model"), merge="psum_scatter")(arrs2, xs2)
 err = np.abs(D.assemble_rows(out2) - y_ref).max()
 print(f"2D equally-sized/psum_scatter              max|err|={err:.2e}")
@@ -65,7 +65,7 @@ arrs_sq = D.place_1d(part_sq, mesh, "data")
 fn = D.spmv_1d(part_sq, mesh, "data")
 v = np.ones(sq, np.float32) / np.sqrt(sq)
 for it in range(10):
-    vs = jax.device_put(jnp.asarray(v), jax.NamedSharding(mesh, jax.P("data")))
+    vs = jax.device_put(jnp.asarray(v), jax.NamedSharding(mesh, P("data")))
     y = D.assemble_rows(fn(arrs_sq, vs))
     v = y / np.linalg.norm(y)
 lam = float(v @ (a_sq @ v))

@@ -30,6 +30,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro import compat
 from repro.configs.base import SHAPES, ArchConfig
 
 __all__ = [
@@ -93,7 +94,7 @@ class CostTerms:
 
     @classmethod
     def from_compiled(cls, compiled) -> "CostTerms":
-        ca = compiled.cost_analysis()
+        ca = compat.cost_analysis(compiled)
         coll = collective_bytes(compiled.as_text())
         return cls(
             flops=float(ca.get("flops", 0.0)),

@@ -1,0 +1,86 @@
+"""JAX API compatibility shims.
+
+The codebase targets the modern JAX surface (``jax.shard_map``, ``jax.P``,
+``jax.sharding.AxisType``); CI and some dev containers pin older releases
+where those names live under ``jax.experimental.shard_map`` /
+``jax.sharding.PartitionSpec`` and meshes have no axis types.  Everything
+that builds meshes or shard_map programs goes through this module so the
+rest of the code can be written once against the new names.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "Mesh", "NamedSharding", "P", "shard_map", "make_mesh", "set_mesh",
+    "get_abstract_mesh", "cost_analysis",
+]
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` on new JAX, ``jax.experimental.shard_map`` on old.
+
+    ``check_vma`` (new name) maps onto ``check_rep`` (old name); both default
+    off here because the SpMV programs do manual collectives whose replication
+    the checker cannot see through.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=bool(check_vma),
+    )
+
+
+def make_mesh(
+    axis_shapes: Sequence[int], axis_names: Sequence[str], devices=None
+) -> Mesh:
+    """Mesh with Auto axis types where the concept exists, plain mesh before."""
+    kwargs = {} if devices is None else {"devices": devices}
+    try:
+        from jax.sharding import AxisType
+    except ImportError:
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+    return jax.make_mesh(
+        tuple(axis_shapes), tuple(axis_names),
+        axis_types=(AxisType.Auto,) * len(tuple(axis_names)), **kwargs
+    )
+
+
+def set_mesh(mesh: Mesh):
+    """Ambient-mesh context: ``jax.set_mesh`` on new JAX; on old JAX the Mesh
+    object is itself the context manager (``with mesh:``)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def get_abstract_mesh():
+    """The ambient mesh installed by :func:`set_mesh`, or None.
+
+    New JAX exposes it as ``jax.sharding.get_abstract_mesh``; on old JAX the
+    ``with mesh:`` context records the physical mesh in thread resources.
+    """
+    gam = getattr(jax.sharding, "get_abstract_mesh", None)
+    if gam is not None:
+        return gam()
+    from jax._src import mesh as mesh_lib
+
+    env_mesh = mesh_lib.thread_resources.env.physical_mesh
+    return None if env_mesh.empty else env_mesh
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as a dict (old JAX wrapped it in a list)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        return dict(ca[0]) if ca else {}
+    return ca

@@ -36,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map as _shard_map
 from repro.core.partition import PartitionedMatrix
 from repro.kernels import ref as kref
 
@@ -165,7 +166,7 @@ def spmv_1d(
             y = y.at[rp_l[0]].add(jnp.where(ns_l[0], recv, jnp.zeros_like(recv)))
         return y[None]
 
-    shmap = jax.shard_map(
+    shmap = _shard_map(
         _step,
         mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis)),
@@ -328,7 +329,7 @@ def spmv_1d_ring(
             y = y.at[rp_l[0]].add(jnp.where(ns_l[0], recv, jnp.zeros_like(recv)))
         return y[None]
 
-    shmap = jax.shard_map(
+    shmap = _shard_map(
         _step,
         mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis), P(axis)),
@@ -427,7 +428,7 @@ def spmv_2d(
         return buf[None, None]
 
     out_spec = P(da, ma) if merge != "global" else P(None, None)
-    shmap = jax.shard_map(
+    shmap = _shard_map(
         _step,
         mesh=mesh,
         in_specs=(P(da, ma), P(ma)),

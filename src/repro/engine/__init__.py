@@ -1,0 +1,36 @@
+"""repro.engine — a batched SpMV serving engine with plan caching.
+
+The paper's preprocessing costs (format conversion, partitioning, transfer to
+the PIM banks) only pay off when amortized over many multiplications of the
+same matrix.  This package is that amortization layer for the TPU port:
+
+  * :mod:`registry`   — named matrices, fingerprinted via core/stats
+  * :mod:`plan_cache` — LRU cache of partitioned + device-placed + compiled
+                        SpMV programs keyed on (fingerprint, mesh, dtype,
+                        scheme)
+  * :mod:`engine`     — SpmvEngine: register once, multiply many times with
+                        zero re-partitioning / re-tracing
+  * :mod:`batcher`    — micro-batching of concurrent multiply requests into
+                        SpMM (multi-RHS) calls
+  * :mod:`telemetry`  — per-request load / kernel / retrieve time splits
+                        (paper Fig. 17 breakdown)
+"""
+from .batcher import MicroBatcher
+from .engine import SpmvEngine
+from .plan_cache import CacheStats, CompiledPlan, PlanCache, PlanKey
+from .registry import MatrixRegistry, RegisteredMatrix, fingerprint_matrix
+from .telemetry import RequestRecord, Telemetry
+
+__all__ = [
+    "SpmvEngine",
+    "MicroBatcher",
+    "PlanCache",
+    "PlanKey",
+    "CompiledPlan",
+    "CacheStats",
+    "MatrixRegistry",
+    "RegisteredMatrix",
+    "fingerprint_matrix",
+    "Telemetry",
+    "RequestRecord",
+]

@@ -1,0 +1,151 @@
+"""Micro-batching of concurrent SpMV requests into SpMM calls.
+
+Single-vector SpMV is memory-bound: the matrix traffic (values + indices)
+dominates and is paid once per call.  Coalescing B concurrent right-hand
+sides into one (cols, B) SpMM reuses that traffic across the batch — the
+TPU analogue of the paper's point that PIM SpMV wins only when data movement
+is amortized.  The batcher therefore:
+
+  * queues ``submit(name, x)`` requests per matrix,
+  * flushes a matrix's queue as one ``engine.multiply(name, X)`` with X
+    stacked column-wise, when the queue reaches ``max_batch``, on explicit
+    ``flush()``, or periodically from the optional background thread,
+  * pads the batch up to the next size in ``buckets`` so the jitted program
+    sees a bounded set of batch shapes (one retrace per bucket, ever).
+
+Results are delivered through ``concurrent.futures.Future``s so callers can
+block, poll or chain.
+"""
+from __future__ import annotations
+
+import threading
+from collections import defaultdict
+from concurrent.futures import Future
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["MicroBatcher"]
+
+
+class MicroBatcher:
+    def __init__(
+        self,
+        engine,
+        max_batch: int = 8,
+        buckets: Sequence[int] = (1, 2, 4, 8),
+        auto_flush: bool = True,
+    ) -> None:
+        if max_batch > max(buckets):
+            raise ValueError("max_batch must be <= the largest bucket")
+        self.engine = engine
+        self.max_batch = max_batch
+        self.buckets = tuple(sorted(buckets))
+        self.auto_flush = auto_flush
+        self._lock = threading.Lock()
+        self._queues: Dict[str, List[Tuple[np.ndarray, Future]]] = defaultdict(list)
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        self.batches_run = 0
+        self.vectors_run = 0
+
+    # ------------------------------------------------------------- requests
+
+    def submit(self, name: str, x) -> Future:
+        """Enqueue one SpMV; returns a Future resolving to y (rows,)."""
+        entry = self.engine.registry.get(name)  # fail fast on unknown names
+        x = np.asarray(x)
+        if x.ndim != 1:
+            raise ValueError("submit takes a single vector; use engine.multiply"
+                             " for explicit batches")
+        if x.shape[0] != entry.shape[1]:
+            raise ValueError(
+                f"x has {x.shape[0]} rows, matrix {name!r} has "
+                f"{entry.shape[1]} cols"
+            )
+        fut: Future = Future()
+        with self._lock:
+            self._queues[name].append((x, fut))
+            full = len(self._queues[name]) >= self.max_batch
+        if full and self.auto_flush:
+            self.flush(name)
+        return fut
+
+    def pending(self, name: Optional[str] = None) -> int:
+        with self._lock:
+            if name is not None:
+                return len(self._queues.get(name, ()))
+            return sum(len(q) for q in self._queues.values())
+
+    # -------------------------------------------------------------- flushing
+
+    def _bucket(self, b: int) -> int:
+        for size in self.buckets:
+            if size >= b:
+                return size
+        return self.buckets[-1]
+
+    def flush(self, name: Optional[str] = None) -> int:
+        """Run queued requests now; returns the number of vectors served."""
+        with self._lock:
+            names = [name] if name is not None else list(self._queues)
+            taken = {n: self._queues.pop(n, []) for n in names}
+        served = 0
+        for n, reqs in taken.items():
+            while reqs:
+                chunk, reqs = reqs[: self.max_batch], reqs[self.max_batch:]
+                self._run_batch(n, chunk)
+                served += len(chunk)
+        return served
+
+    def _run_batch(self, name: str, reqs: List[Tuple[np.ndarray, Future]]) -> None:
+        # claim the futures up front; drop waiters that cancelled meanwhile
+        live = [(x, f) for x, f in reqs if f.set_running_or_notify_cancel()]
+        if not live:
+            return
+        try:
+            xs = [x for x, _ in live]
+            b = len(xs)
+            padded = self._bucket(b)
+            X = np.stack(xs + [np.zeros_like(xs[0])] * (padded - b), axis=1)
+            Y = self.engine.multiply(name, X)
+        except Exception as exc:  # deliver the failure to every waiter
+            for _, fut in live:
+                fut.set_exception(exc)
+            return
+        self.batches_run += 1
+        self.vectors_run += b
+        for j, (_, fut) in enumerate(live):
+            fut.set_result(np.asarray(Y[:, j]))
+
+    # ------------------------------------------------------- background mode
+
+    def start(self, interval_s: float = 0.002) -> None:
+        """Flush pending queues every ``interval_s`` from a daemon thread."""
+        if self._thread is not None:
+            return
+        self._stop.clear()
+
+        def loop():
+            while not self._stop.wait(interval_s):
+                self.flush()
+
+        self._thread = threading.Thread(target=loop, daemon=True,
+                                        name="spmv-microbatcher")
+        self._thread.start()
+
+    def stop(self, drain: bool = True) -> None:
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._thread.join()
+        self._thread = None
+        if drain:
+            self.flush()
+
+    def __enter__(self) -> "MicroBatcher":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()

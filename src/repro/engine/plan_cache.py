@@ -1,0 +1,130 @@
+"""LRU cache of compiled SpMV plans.
+
+A *compiled plan* is everything the one-shot path rebuilds per call and the
+engine refuses to: the PartitionedMatrix (host preprocessing), the
+device-placed arrays (the paper's load-matrix transfer) and the traced +
+jitted shard_map executable.  Entries are keyed on
+
+    (matrix fingerprint, mesh shape, dtype, scheme)
+
+so the same matrix served on a different mesh, in a different precision, or
+under a forced scheme compiles its own entry, while a re-registered identical
+matrix reuses the existing one (hit).  Eviction is LRU at a fixed capacity —
+placed matrices pin device memory, so the cache bound is the engine's memory
+bound.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Callable, Optional, Tuple
+
+from repro.core.adaptive import Plan
+from repro.core.partition import PartitionedMatrix
+
+__all__ = ["PlanKey", "CompiledPlan", "CacheStats", "PlanCache"]
+
+# (fingerprint, mesh_shape, dtype, scheme) — the identity of one executable
+PlanKey = Tuple[str, tuple, str, str]
+
+
+@dataclass
+class CompiledPlan:
+    """A ready-to-run SpMV program for one (matrix, mesh, dtype, scheme)."""
+
+    key: PlanKey
+    plan: Plan
+    part: PartitionedMatrix  # static metadata (grid, h_pad, scheme, ...)
+    arrays: dict  # device-placed matrix pytree (the cached 'load' step)
+    run: Callable  # (arrays, x_device) -> SpmvOutput; jit-cached per x shape
+    mesh: object
+    axes: tuple  # mesh axis names the program uses
+    x_spec: object  # PartitionSpec x must be placed with
+    x_pad: int  # x is zero-padded to this length before placement
+    trace_count_fn: Callable[[], int]  # traces of the underlying program
+    build_seconds: float = 0.0  # partition + place + first-trace wall time
+    assemble_meta: Optional[dict] = None  # host row_start/row_extent/rows
+    requests_served: int = 0  # multiply() calls answered by this executable
+
+    @property
+    def trace_count(self) -> int:
+        return self.trace_count_fn()
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    size: int = 0
+    capacity: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class PlanCache:
+    """LRU mapping PlanKey -> CompiledPlan with hit/miss/eviction counters."""
+
+    def __init__(self, capacity: int = 8) -> None:
+        if capacity < 1:
+            raise ValueError("cache capacity must be >= 1")
+        self.capacity = capacity
+        self._entries: "OrderedDict[PlanKey, CompiledPlan]" = OrderedDict()
+        self._hits = 0
+        self._misses = 0
+        self._evictions = 0
+
+    def get(self, key: PlanKey) -> Optional[CompiledPlan]:
+        entry = self._entries.get(key)
+        if entry is None:
+            self._misses += 1
+            return None
+        self._entries.move_to_end(key)
+        self._hits += 1
+        return entry
+
+    def peek(self, key: PlanKey) -> Optional[CompiledPlan]:
+        """Lookup without touching LRU order or counters (introspection)."""
+        return self._entries.get(key)
+
+    def put(self, entry: CompiledPlan) -> Optional[CompiledPlan]:
+        """Insert; returns the evicted entry when capacity overflows."""
+        self._entries[entry.key] = entry
+        self._entries.move_to_end(entry.key)
+        if len(self._entries) > self.capacity:
+            _, evicted = self._entries.popitem(last=False)
+            self._evictions += 1
+            return evicted
+        return None
+
+    def evict(self, key: PlanKey) -> Optional[CompiledPlan]:
+        entry = self._entries.pop(key, None)
+        if entry is not None:
+            self._evictions += 1
+        return entry
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+    def __contains__(self, key: PlanKey) -> bool:
+        return key in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def keys(self):
+        """Keys from least- to most-recently used."""
+        return list(self._entries.keys())
+
+    @property
+    def stats(self) -> CacheStats:
+        return CacheStats(
+            hits=self._hits,
+            misses=self._misses,
+            evictions=self._evictions,
+            size=len(self._entries),
+            capacity=self.capacity,
+        )

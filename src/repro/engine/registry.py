@@ -1,0 +1,82 @@
+"""Named-matrix registry with structural fingerprinting.
+
+A fingerprint identifies a matrix up to exact value/structure equality: two
+registrations with the same fingerprint can share one partitioned, placed and
+compiled plan (paper §3.1: preprocessing is per-matrix, so identity is what
+makes caching sound).  The fingerprint folds in shape, dtype and the raw
+nonzero payload, so a re-registered identical matrix is a cache hit while any
+edit — even one value — is a miss.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+from repro.core.adaptive import Plan
+from repro.core.stats import MatrixStats
+
+__all__ = ["fingerprint_matrix", "RegisteredMatrix", "MatrixRegistry"]
+
+
+def fingerprint_matrix(a: np.ndarray) -> str:
+    """Stable content hash of a dense matrix's sparsity structure + values."""
+    a = np.ascontiguousarray(a)
+    h = hashlib.sha256()
+    h.update(repr((a.shape, a.dtype.str)).encode())
+    ri, ci = np.nonzero(a)
+    h.update(ri.astype(np.int64).tobytes())
+    h.update(ci.astype(np.int64).tobytes())
+    h.update(np.ascontiguousarray(a[ri, ci]).tobytes())
+    return h.hexdigest()[:16]
+
+
+@dataclass
+class RegisteredMatrix:
+    """One serving-registry entry: identity, statistics and the chosen plan."""
+
+    name: str
+    fingerprint: str
+    shape: tuple
+    dtype: str
+    stats: MatrixStats
+    plan: Plan
+    cache_key: tuple  # PlanKey of the compiled executable in the plan cache
+    requests: int = 0  # multiplies served (batch of B counts as B)
+
+
+class MatrixRegistry:
+    """name -> RegisteredMatrix.  Thin, but the one place names resolve."""
+
+    def __init__(self) -> None:
+        self._entries: Dict[str, RegisteredMatrix] = {}
+
+    def add(self, entry: RegisteredMatrix) -> RegisteredMatrix:
+        self._entries[entry.name] = entry
+        return entry
+
+    def get(self, name: str) -> RegisteredMatrix:
+        try:
+            return self._entries[name]
+        except KeyError:
+            raise KeyError(
+                f"matrix {name!r} is not registered "
+                f"(registered: {sorted(self._entries)})"
+            ) from None
+
+    def find(self, name: str) -> Optional[RegisteredMatrix]:
+        return self._entries.get(name)
+
+    def remove(self, name: str) -> Optional[RegisteredMatrix]:
+        return self._entries.pop(name, None)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._entries
+
+    def __iter__(self) -> Iterator[RegisteredMatrix]:
+        return iter(self._entries.values())
+
+    def __len__(self) -> int:
+        return len(self._entries)

@@ -1,0 +1,91 @@
+"""Per-request timing telemetry — the paper's Fig. 17 execution breakdown.
+
+The paper decomposes every SpMV into load (transfer x to the banks), kernel
+(the PIM computation) and retrieve+merge (gather partials, merge on host).
+The engine's serving path has the same three phases on TPU:
+
+    load     — place x on the mesh (host -> HBM transfer)
+    kernel   — the jitted shard_map SpMV (compute + on-ICI merge collectives)
+    retrieve — device -> host fetch and row assembly of the output
+
+Each request appends one :class:`RequestRecord`; :meth:`Telemetry.breakdown`
+aggregates the per-phase fractions per matrix, which is exactly the stacked
+bar of Fig. 17 (and what benchmarks/engine_throughput.py prints).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+__all__ = ["RequestRecord", "Telemetry"]
+
+
+@dataclass(frozen=True)
+class RequestRecord:
+    name: str  # registered matrix name
+    batch: int  # number of RHS vectors served by this execution
+    load_s: float
+    kernel_s: float
+    retrieve_s: float
+    cache_hit: bool  # the plan had served before (steady state) vs first serve
+    traced: bool  # this request triggered a (re)trace
+
+    @property
+    def total_s(self) -> float:
+        return self.load_s + self.kernel_s + self.retrieve_s
+
+
+@dataclass
+class _Agg:
+    requests: int = 0
+    vectors: int = 0
+    load_s: float = 0.0
+    kernel_s: float = 0.0
+    retrieve_s: float = 0.0
+    traces: int = 0
+
+
+class Telemetry:
+    """Append-only request log + per-matrix aggregation."""
+
+    def __init__(self, keep_records: bool = True) -> None:
+        self._keep = keep_records
+        self.records: List[RequestRecord] = []
+        self._by_name: Dict[str, _Agg] = {}
+
+    def record(self, rec: RequestRecord) -> None:
+        if self._keep:
+            self.records.append(rec)
+        agg = self._by_name.setdefault(rec.name, _Agg())
+        agg.requests += 1
+        agg.vectors += rec.batch
+        agg.load_s += rec.load_s
+        agg.kernel_s += rec.kernel_s
+        agg.retrieve_s += rec.retrieve_s
+        agg.traces += int(rec.traced)
+
+    def breakdown(self, name: Optional[str] = None) -> dict:
+        """Fig.-17-style per-phase split.
+
+        Returns {matrix: {load, kernel, retrieve (fractions), total_s,
+        requests, vectors, traces}} — or the single dict when ``name`` given.
+        """
+        out = {}
+        for n, agg in self._by_name.items():
+            total = agg.load_s + agg.kernel_s + agg.retrieve_s
+            out[n] = {
+                "requests": agg.requests,
+                "vectors": agg.vectors,
+                "traces": agg.traces,
+                "total_s": total,
+                "load": agg.load_s / total if total else 0.0,
+                "kernel": agg.kernel_s / total if total else 0.0,
+                "retrieve": agg.retrieve_s / total if total else 0.0,
+            }
+        if name is not None:
+            return out.get(name, {})
+        return out
+
+    def clear(self) -> None:
+        self.records.clear()
+        self._by_name.clear()

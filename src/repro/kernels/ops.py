@@ -24,7 +24,7 @@ from .coo_spmv import coo_spmv_pallas, plan_chunks
 from .csr_spmv import csr_plan_chunks, csr_spmv_pallas
 from .ell_spmv import ell_spmv_pallas
 
-__all__ = ["spmv", "spmv_local_coo", "spmv_local_block"]
+__all__ = ["spmv", "spmm", "spmv_local_coo", "spmv_local_block"]
 
 
 def spmv(m, x: jax.Array, impl: str = "xla", interpret: bool = True) -> jax.Array:
@@ -77,6 +77,24 @@ def spmv(m, x: jax.Array, impl: str = "xla", interpret: bool = True) -> jax.Arra
             )
         raise TypeError(type(m))
     raise ValueError(f"unknown impl {impl!r}")
+
+
+def spmm(m, X: jax.Array, impl: str = "xla", interpret: bool = True) -> jax.Array:
+    """Multi-RHS SpMV: Y = m @ X with X of shape (cols, B) -> (rows, B).
+
+    The batch dimension threads through every oracle in kernels/ref.py
+    (their gathers/scatters are written over ``x.shape[1:]``), so this is the
+    same code path the engine's micro-batcher exercises distributed.  The
+    Pallas kernels are single-RHS for now; request them per column instead.
+    """
+    X = jnp.asarray(X)
+    if X.ndim != 2:
+        raise ValueError(f"spmm expects X of shape (cols, B); got {X.shape}")
+    if impl != "xla":
+        raise NotImplementedError(
+            "spmm is XLA-only; the Pallas kernels take one RHS at a time"
+        )
+    return spmv(m, X, impl=impl, interpret=interpret)
 
 
 def _bcsr_to_bcoo_indices(m: F.BCSR) -> jax.Array:

@@ -5,7 +5,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 For each (architecture x input shape x mesh) cell:
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         lowered  = jax.jit(step, in_shardings=..., donate...).lower(*input_specs)
         compiled = lowered.compile()
         print(compiled.memory_analysis())   # proves it fits per device
@@ -33,6 +33,8 @@ import time
 import traceback
 
 import jax
+
+from repro import compat
 
 from repro.analysis import roofline as R
 from repro.configs import get_config, list_configs
@@ -75,7 +77,7 @@ def lower_cell(cfg, shape_name: str, mesh, donate=True, microbatches=None):
     )
     if microbatches is None:
         microbatches = _microbatches(cfg, shape_name)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         if kind == "train":
             opt_cfg = _opt_cfg(cfg)
             params, opt = S.abstract_state(cfg, opt_cfg)
@@ -163,7 +165,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, probe: bool,
     lowered, compiled = lower_cell(cfg, shape_name, mesh)
     dt = time.monotonic() - t0
     mem = compiled.memory_analysis()
-    ca = compiled.cost_analysis()
+    ca = compat.cost_analysis(compiled)
     coll = R.collective_bytes(compiled.as_text())
     print(f"[ok] {label} compiled in {dt:.1f}s")
     print(f"     memory_analysis: {mem}")

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.analysis import roofline as R
 from repro.core import distributed as D
 from repro.core.partition import PartitionedMatrix
@@ -72,7 +73,7 @@ def lower_1d(mat, mesh, axis="data", ring=False):
         lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), D._arrays(mat)
     )
     x_aval = jax.ShapeDtypeStruct((mat.shape[1],), jnp.float32)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         lowered = fn.jitted.lower(arrs_aval, x_aval)
     return lowered, lowered.compile()
 
@@ -89,16 +90,13 @@ def main(argv=None):
         mesh = make_production_mesh(multi_pod=multi_pod)
         # the partition axis is the full mesh: every chip is a PIM core
         devs = mesh.devices.size
-        flat = jax.make_mesh(
-            (devs,), ("data",),
-            axis_types=(jax.sharding.AxisType.Auto,),
-        )
+        flat = compat.make_mesh((devs,), ("data",))
         mat = synth_partition_1d(args.rows, args.rows, args.nnz_per_row, devs)
         for ring in (False, True):
             label = f"spmv.1d{'.ring' if ring else ''}.{'multipod512' if multi_pod else 'pod256'}"
             lowered, compiled = lower_1d(mat, flat, "data", ring=ring)
             mem = compiled.memory_analysis()
-            ca = compiled.cost_analysis()
+            ca = compat.cost_analysis(compiled)
             coll = R.collective_bytes(compiled.as_text())
             rec = {
                 "name": label,

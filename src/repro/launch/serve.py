@@ -15,6 +15,8 @@ import argparse
 import time
 
 import jax
+
+from repro import compat
 import jax.numpy as jnp
 import numpy as np
 
@@ -32,7 +34,7 @@ class Server:
         self.cfg, self.mesh, self.max_len = cfg, mesh, max_len
         pspecs = lm.param_specs(cfg)
         self.p_sh = make_shardings(mesh, pspecs)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             self.params = jax.jit(
                 lambda k: lm.init_params(k, cfg), out_shardings=self.p_sh
             )(jax.random.PRNGKey(0))
@@ -45,7 +47,7 @@ class Server:
 
     def generate(self, prompts: np.ndarray, n_tokens: int):
         """prompts: (B, S) int32. Greedy decode n_tokens. Returns (B, n)."""
-        with jax.set_mesh(self.mesh):
+        with compat.set_mesh(self.mesh):
             logits, caches = self._prefill(self.params, jnp.asarray(prompts))
             tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
             out = [tok]

@@ -19,6 +19,8 @@ from dataclasses import replace
 from functools import partial
 
 import jax
+
+from repro import compat
 import jax.numpy as jnp
 import numpy as np
 
@@ -36,6 +38,7 @@ from repro.runtime import (
     restore_checkpoint,
     save_checkpoint,
 )
+from repro.runtime.elastic import sanitize_shardings
 
 __all__ = ["TrainLoop", "main"]
 
@@ -55,20 +58,36 @@ class TrainLoop:
         self.policy = RestartPolicy()
 
         pspecs, ospecs = S.state_specs(cfg, opt_cfg)
-        self.p_sh = make_shardings(mesh, pspecs)
-        self.o_sh = make_shardings(mesh, ospecs)
-        self.b_sh = make_shardings(
-            mesh, {"tokens": S.batch_spec(None), "labels": S.batch_spec(None)}
+        # sanitize against the abstract state: small smoke configs / meshes
+        # (batch 2 on a 4-way data axis, 4 heads on a 16-way model axis) would
+        # otherwise fail pjit's exact-divisibility check (same as dryrun.py)
+        params_aval, opt_aval = S.abstract_state(cfg, opt_cfg)
+        batch_aval = jax.eval_shape(lambda: self.stream.batch(0))
+        self.p_sh = sanitize_shardings(make_shardings(mesh, pspecs), params_aval)
+        self.o_sh = sanitize_shardings(make_shardings(mesh, ospecs), opt_aval)
+        self.b_sh = sanitize_shardings(
+            make_shardings(
+                mesh,
+                {"tokens": S.batch_spec(None), "labels": S.batch_spec(None)},
+            ),
+            batch_aval,
         )
 
         base_step = S.make_train_step(cfg, opt_cfg)
         if compress_pod_grads:
             base_step = self._wrap_compressed(base_step)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             self.step_fn = jax.jit(
                 base_step,
                 in_shardings=(self.p_sh, self.o_sh, self.b_sh)
-                + ((self.p_sh,) if compress_pod_grads else ()),
+                # the error-feedback residual inherits whatever sharding
+                # compress_grads left on it — let pjit infer it
+                + ((None,) if compress_pod_grads else ()),
+                # pin state outputs to the state shardings: otherwise GSPMD
+                # may emit params with a different placement and the next
+                # call's in_shardings reject them
+                out_shardings=(self.p_sh, self.o_sh, None)
+                + ((None,) if compress_pod_grads else ()),
                 donate_argnums=(0, 1),
             )
         self.params = None
@@ -95,7 +114,7 @@ class TrainLoop:
     # -- state ---------------------------------------------------------------
 
     def init_state(self, seed: int = 0):
-        with jax.set_mesh(self.mesh):
+        with compat.set_mesh(self.mesh):
             init = jax.jit(
                 partial(lm.init_params, cfg=self.cfg),
                 out_shardings=self.p_sh,

@@ -19,7 +19,12 @@ def dist_output():
         [sys.executable, os.path.join(ROOT, "tests", "_distributed_runner.py")],
         capture_output=True, text=True, env=env, timeout=600,
     )
-    assert proc.returncode == 0, proc.stderr[-3000:]
+    if "DISTRIBUTED SKIP" in proc.stdout:
+        # the runner could not force 8 fake devices on this backend — a
+        # single-device environment, not a correctness failure
+        pytest.skip("multi-device SpMV needs 8 (forced) devices")
+    if proc.returncode != 0:
+        pytest.fail(f"distributed runner crashed:\n{proc.stderr[-3000:]}")
     return proc.stdout
 
 

@@ -13,14 +13,15 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import dataclasses
 import jax
+
+from repro import compat
 import jax.numpy as jnp
 from repro.configs import get_config
 from repro.launch import steps as S
 from repro.launch.dryrun import lower_cell, _opt_cfg
 from repro.analysis import roofline as R
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = compat.make_mesh((4, 2), ("data", "model"))
 for arch in ("llama3.2-1b", "mixtral-8x22b", "xlstm-1.3b"):
     cfg = dataclasses.replace(
         get_config(arch).reduced(),
@@ -34,7 +35,7 @@ for arch in ("llama3.2-1b", "mixtral-8x22b", "xlstm-1.3b"):
         # 64-dim model on 8 fake devices compiles in seconds.
         lowered, compiled = lower_cell(cfg, shape, mesh, microbatches=1)
         mem = compiled.memory_analysis()
-        ca = compiled.cost_analysis()
+        ca = compat.cost_analysis(compiled)
         coll = R.collective_bytes(compiled.as_text())
         assert mem.temp_size_in_bytes > 0
         assert ca.get("flops", 0) > 0

@@ -1,0 +1,322 @@
+"""repro.engine — plan cache, registry, batcher and serving correctness.
+
+Single-device semantics (cache hit/miss/LRU, zero-retrace, batcher
+coalescing, telemetry splits) run inline in the pytest process; the
+multi-device 1D/2D serving paths run in a hermetic subprocess with 8 forced
+fake devices (same pattern as tests/test_distributed.py) and skip cleanly
+when the forcing doesn't take.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.data.matrices import block_matrix, regular_matrix, scale_free_matrix
+from repro.engine import MicroBatcher, PlanCache, SpmvEngine, fingerprint_matrix
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _mats():
+    return {
+        "regular": regular_matrix(96, 128, 5, seed=1),
+        "scale-free": scale_free_matrix(96, 128, 600, seed=2),
+        "block": block_matrix(96, 128, block=(8, 16), block_density=0.2, seed=3),
+    }
+
+
+@pytest.fixture()
+def engine():
+    return SpmvEngine(cache_capacity=4)
+
+
+# ---------------------------------------------------------------- serving
+
+
+@pytest.mark.parametrize("cls", ["regular", "scale-free", "block"])
+def test_multiply_matches_oracle(engine, cls):
+    a = _mats()[cls]
+    engine.register(cls, a)
+    x = np.random.default_rng(0).standard_normal(a.shape[1]).astype(np.float32)
+    np.testing.assert_allclose(
+        engine.multiply(cls, x), a @ x, rtol=1e-3, atol=1e-4
+    )
+
+
+def test_batched_multiply_agrees_with_singles(engine):
+    a = _mats()["regular"]
+    engine.register("m", a)
+    X = np.random.default_rng(1).standard_normal((a.shape[1], 4)).astype(np.float32)
+    Y = engine.multiply("m", X)
+    np.testing.assert_allclose(Y, a @ X, rtol=1e-3, atol=1e-4)
+    singles = np.stack([engine.multiply("m", X[:, j]) for j in range(4)], axis=1)
+    np.testing.assert_allclose(Y, singles, rtol=1e-4, atol=1e-5)
+
+
+def test_multiply_is_trace_and_partition_free_when_cached(engine):
+    a = _mats()["regular"]
+    engine.register("m", a)  # warmup traces the vector shape
+    x = np.zeros(a.shape[1], np.float32)
+    engine.multiply("m", x)  # first timed request may reuse the warm trace
+    traces, parts = engine.trace_count("m"), engine.partition_count
+    for _ in range(5):
+        engine.multiply("m", x)
+    assert engine.trace_count("m") == traces
+    assert engine.partition_count == parts
+    assert all(r.traced is False for r in engine.telemetry.records[-5:])
+
+
+def test_unsafe_dtype_cast_is_rejected(engine):
+    a = np.zeros((8, 8), np.int8)
+    a[0, 0], a[3, 4] = 2, 5
+    engine.register("int8", a)
+    with pytest.raises(TypeError, match="cannot safely cast"):
+        engine.multiply("int8", np.full(8, 0.5, np.float32))
+    y = engine.multiply("int8", np.ones(8, np.int8))
+    np.testing.assert_array_equal(y, a @ np.ones(8, np.int8))
+
+
+def test_2d_unfit_bcsr_plan_falls_back_to_bcoo(engine):
+    from repro.core.adaptive import Plan
+
+    # pretend 3 devices: neither (1,3) nor (3,1) divides the 8x16 block
+    # shape, so _fit_plan must fall back to 1D and downgrade bcsr to a
+    # COO-family format (element-granular balancing is COO-only)
+    engine.devices = engine.devices * 3
+    plan = Plan("2d", "equally-sized", "bcsr", "psum", (1, 3), "forced")
+    fitted = engine._fit_plan(plan, (8, 16), np.float32)
+    assert fitted.partitioning == "1d"
+    assert fitted.fmt == "bcoo"
+    assert fitted.scheme == "nnz"
+
+
+def test_cache_hit_marks_first_serve_false(engine):
+    a = _mats()["regular"]
+    engine.register("m", a, warmup=False)
+    engine.multiply("m", np.zeros(a.shape[1], np.float32))
+    engine.multiply("m", np.zeros(a.shape[1], np.float32))
+    hits = [r.cache_hit for r in engine.telemetry.records]
+    assert hits == [False, True]
+
+
+def test_unknown_name_and_bad_shape(engine):
+    with pytest.raises(KeyError):
+        engine.multiply("nope", np.zeros(4, np.float32))
+    engine.register("m", _mats()["regular"])
+    with pytest.raises(ValueError):
+        engine.multiply("m", np.zeros(7, np.float32))
+
+
+# ---------------------------------------------------------------- plan cache
+
+
+def test_cache_hit_and_miss_counters(engine):
+    a = _mats()["regular"]
+    engine.register("m", a, warmup=False)
+    s0 = engine.cache.stats
+    assert s0.misses == 1 and s0.size == 1
+    engine.multiply("m", np.zeros(a.shape[1], np.float32))
+    assert engine.cache.stats.hits == s0.hits + 1
+
+
+def test_reregister_identical_matrix_reuses_executable(engine):
+    a = _mats()["regular"]
+    engine.register("m1", a)
+    cp1 = engine.plan_for("m1")
+    traces = cp1.trace_count
+    parts = engine.partition_count
+    engine.register("m2", a.copy())  # same fingerprint, other name
+    assert engine.plan_for("m2") is cp1  # the very same compiled plan
+    assert engine.trace_count("m2") == traces  # warm shape: no retrace
+    assert engine.partition_count == parts  # no re-partitioning
+    assert engine.cache.stats.evictions == 0
+
+
+def test_fingerprint_sensitivity():
+    a = _mats()["regular"]
+    b = a.copy()
+    ri, ci = np.nonzero(b)
+    b[ri[0], ci[0]] += 1.0  # one value changes -> different fingerprint
+    assert fingerprint_matrix(a) == fingerprint_matrix(a.copy())
+    assert fingerprint_matrix(a) != fingerprint_matrix(b)
+
+
+def test_lru_eviction_at_capacity():
+    eng = SpmvEngine(cache_capacity=2)
+    mats = _mats()
+    eng.register("a", mats["regular"], warmup=False)
+    eng.register("b", mats["scale-free"], warmup=False)
+    key_a = eng.registry.get("a").cache_key
+    eng.multiply("a", np.zeros(128, np.float32))  # touch a: b becomes LRU
+    key_b = eng.registry.get("b").cache_key
+    eng.register("c", mats["block"], warmup=False)  # overflows capacity 2
+    stats = eng.cache.stats
+    assert stats.evictions == 1
+    assert key_b not in eng.cache  # LRU victim
+    assert key_a in eng.cache
+    with pytest.raises(RuntimeError, match="evicted"):
+        eng.multiply("b", np.zeros(128, np.float32))
+
+
+def test_plan_cache_unit():
+    from repro.engine.plan_cache import CompiledPlan
+
+    def entry(i):
+        return CompiledPlan(
+            key=(f"fp{i}", (1, 1), "<f4", "s"), plan=None, part=None,
+            arrays=None, run=None, mesh=None, axes=(), x_spec=None, x_pad=0,
+            trace_count_fn=lambda: 0,
+        )
+
+    cache = PlanCache(capacity=2)
+    assert cache.get(("fp0", (1, 1), "<f4", "s")) is None  # miss
+    cache.put(entry(0))
+    cache.put(entry(1))
+    assert cache.get(entry(0).key) is not None  # hit; 1 is now LRU
+    evicted = cache.put(entry(2))
+    assert evicted is not None and evicted.key[0] == "fp1"
+    st = cache.stats
+    assert (st.hits, st.misses, st.evictions, st.size) == (1, 1, 1, 2)
+    assert 0.0 < st.hit_rate < 1.0
+
+
+# ---------------------------------------------------------------- batcher
+
+
+def test_batcher_coalesces_and_answers(engine):
+    a = _mats()["scale-free"]
+    engine.register("m", a)
+    mb = MicroBatcher(engine, max_batch=4, buckets=(1, 2, 4))
+    rng = np.random.default_rng(2)
+    vecs = [rng.standard_normal(a.shape[1]).astype(np.float32) for _ in range(4)]
+    futs = [mb.submit("m", v) for v in vecs]
+    # max_batch reached -> auto-flushed as ONE SpMM batch
+    assert mb.batches_run == 1 and mb.vectors_run == 4
+    for f, v in zip(futs, vecs):
+        np.testing.assert_allclose(f.result(), a @ v, rtol=1e-3, atol=1e-4)
+
+
+def test_batcher_partial_flush_pads_to_bucket(engine):
+    a = _mats()["regular"]
+    engine.register("m", a)
+    mb = MicroBatcher(engine, max_batch=4, buckets=(1, 2, 4))
+    rng = np.random.default_rng(3)
+    vecs = [rng.standard_normal(a.shape[1]).astype(np.float32) for _ in range(3)]
+    futs = [mb.submit("m", v) for v in vecs]
+    assert mb.pending("m") == 3
+    assert mb.flush() == 3
+    assert mb.pending() == 0
+    for f, v in zip(futs, vecs):
+        np.testing.assert_allclose(f.result(), a @ v, rtol=1e-3, atol=1e-4)
+
+
+def test_batcher_bounded_trace_shapes(engine):
+    """Bucket padding keeps the jitted program at <= len(buckets) shapes."""
+    a = _mats()["regular"]
+    engine.register("m", a)
+    mb = MicroBatcher(engine, max_batch=4, buckets=(1, 2, 4), auto_flush=False)
+    rng = np.random.default_rng(4)
+    for n in (3, 2, 4, 3, 1, 2):  # many batch sizes, few buckets
+        for _ in range(n):
+            mb.submit("m", rng.standard_normal(a.shape[1]).astype(np.float32))
+        mb.flush()
+    # traces: warmup vector + B=1 ... shares warmup ... buckets {1,2,4} only
+    assert engine.trace_count("m") <= 1 + 3
+
+
+def test_batcher_rejects_wrong_length_vector(engine):
+    engine.register("m", _mats()["regular"])
+    mb = MicroBatcher(engine, max_batch=4, buckets=(4,), auto_flush=False)
+    with pytest.raises(ValueError, match="cols"):
+        mb.submit("m", np.zeros(100, np.float32))  # matrix has 128 cols
+
+
+def test_batcher_survives_cancelled_future(engine):
+    a = _mats()["regular"]
+    engine.register("m", a)
+    mb = MicroBatcher(engine, max_batch=8, buckets=(8,), auto_flush=False)
+    f1 = mb.submit("m", np.zeros(a.shape[1], np.float32))
+    x = np.ones(a.shape[1], np.float32)
+    f2 = mb.submit("m", x)
+    assert f1.cancel()
+    mb.flush()  # must not blow up on the cancelled waiter
+    np.testing.assert_allclose(f2.result(timeout=5), a @ x, rtol=1e-3, atol=1e-4)
+
+
+def test_reregister_name_with_new_matrix_evicts_old_plan(engine):
+    mats = _mats()
+    engine.register("m", mats["regular"])
+    old_key = engine.registry.get("m").cache_key
+    engine.register("m", mats["scale-free"])  # same name, different matrix
+    assert engine.registry.get("m").cache_key != old_key
+    assert old_key not in engine.cache  # old plan not stranded
+    x = np.zeros(128, np.float32)
+    np.testing.assert_allclose(
+        engine.multiply("m", x), mats["scale-free"] @ x, rtol=1e-3, atol=1e-4
+    )
+
+
+def test_batcher_delivers_failures(engine):
+    engine.register("m", _mats()["regular"])
+    mb = MicroBatcher(engine, max_batch=8, buckets=(8,), auto_flush=False)
+    fut = mb.submit("m", np.zeros(128, np.float32))
+    engine.cache.clear()  # simulate eviction under the batcher
+    mb.flush()
+    with pytest.raises(RuntimeError):
+        fut.result(timeout=5)
+
+
+# ---------------------------------------------------------------- telemetry
+
+
+def test_telemetry_breakdown_fractions(engine):
+    a = _mats()["regular"]
+    engine.register("m", a)
+    for _ in range(3):
+        engine.multiply("m", np.zeros(a.shape[1], np.float32))
+    bd = engine.telemetry.breakdown("m")
+    assert bd["requests"] == 3
+    assert bd["vectors"] == 3
+    assert abs(bd["load"] + bd["kernel"] + bd["retrieve"] - 1.0) < 1e-9
+    assert bd["total_s"] > 0
+
+
+# ------------------------------------------------------------- multi-device
+
+
+@pytest.fixture(scope="module")
+def engine_dist_output():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tests", "_engine_runner.py")],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    if "ENGINE SKIP" in proc.stdout:
+        pytest.skip("multi-device engine tests need 8 (forced) devices")
+    if proc.returncode != 0:
+        pytest.fail(f"engine runner crashed:\n{proc.stderr[-3000:]}")
+    return proc.stdout
+
+
+def test_engine_multi_device_all_ok(engine_dist_output):
+    assert "ENGINE DONE" in engine_dist_output
+    assert "FAIL" not in engine_dist_output
+
+
+@pytest.mark.parametrize("line", [
+    "ENGINE oracle regular.1d: OK", "ENGINE oracle regular.2d: OK",
+    "ENGINE oracle scale-free.1d: OK", "ENGINE oracle scale-free.2d: OK",
+    "ENGINE oracle block.1d: OK", "ENGINE oracle block.2d: OK",
+    "ENGINE batch regular.1d: OK", "ENGINE batch regular.2d: OK",
+    "ENGINE batch scale-free.1d: OK", "ENGINE batch scale-free.2d: OK",
+    "ENGINE batch block.1d: OK", "ENGINE batch block.2d: OK",
+    "ENGINE variable-sized odd-width: OK",
+    "ENGINE steady-state zero-retrace: OK",
+    "ENGINE batcher: OK",
+])
+def test_engine_scheme(engine_dist_output, line):
+    assert line in engine_dist_output

@@ -1,5 +1,7 @@
 """Fault tolerance: health monitoring, failure injection, elastic rescale."""
 import jax
+
+from repro import compat
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -72,8 +74,7 @@ def test_rescale_mesh_shape():
 def test_sanitize_shardings_drops_indivisible():
     from jax.sharding import PartitionSpec as P
 
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((1,), ("model",))
     sh = make_shardings(mesh, {"w": P(None, "model")})
     aval = {"w": jax.ShapeDtypeStruct((8, 3), jnp.float32)}
     # 3 % 1 == 0 -> kept; fake a 16-wide mesh via spec check on shape (8, 3)

@@ -8,6 +8,10 @@ Invariants (the system's correctness spine):
 """
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)"
+)
 from hypothesis import given, settings, strategies as st
 
 from repro.core.partition import partition_1d, partition_2d
