@@ -1,6 +1,6 @@
 """Benchmark harness — one module per paper table/figure family.
 
-    PYTHONPATH=src python -m benchmarks.run [--scale N] [--quick]
+    PYTHONPATH=src python -m benchmarks.run [--scale N] [--quick] [--smoke]
 
 Prints ``name,us_per_call,derived`` CSV rows (one block per figure).
 Mapping to the paper:
@@ -9,58 +9,60 @@ Mapping to the paper:
   fig17_24_2d        Figs. 17-24: 2D padding/vertical-partition/format studies
   fig25_29_compare   Figs. 25-29: 1D-vs-2D winners + fraction-of-peak
   spmv_distributed   end-to-end distributed SpMV timings (8 fake devices,
-                     subprocess; the LM-side numbers live in §Roofline)
+                     subprocess, routed through repro.api; the LM-side
+                     numbers live in §Roofline)
+
+``--smoke`` is the CI wiring check: imports every benchmark module, runs the
+single-core block on the Table-3 miniatures and one tiny api-routed
+distributed matrix, all on CPU in a few minutes.
 """
 import argparse
 import os
 import subprocess
 import sys
 
-
-def _distributed_block():
-    """Run the 8-device distributed SpMV timing in a subprocess."""
-    print("# --- distributed: 1D/2D end-to-end on 8 fake devices")
-    env = dict(os.environ)
-    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    env["PYTHONPATH"] = os.path.join(root, "src")
-    code = r"""
+# The distributed block runs in a subprocess (fake-device forcing must happen
+# before jax initializes) and goes through the repro.api pipeline — the same
+# SparseMatrix -> plan -> compile chain users and the engine run.
+_DISTRIBUTED_CODE = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import time
-import numpy as np, jax, jax.numpy as jnp
-from repro import compat
-from repro.compat import P
-from repro.core.partition import partition_1d, partition_2d
-from repro.core import distributed as D
-from repro.data import paper_large_suite
+import numpy as np, jax
+from repro.api import SparseMatrix
+from repro.data import paper_large_suite, paper_small_suite
 
-mesh1 = compat.make_mesh((8,), ("data",))
-mesh2 = compat.make_mesh((4, 2), ("data", "model"))
-for spec in paper_large_suite(1)[:4] + paper_large_suite(1)[-3:]:
-    a = spec.build()
-    x = np.random.default_rng(0).standard_normal(a.shape[1]).astype(np.float32)
-    part = partition_1d(a, 8, fmt="coo", balance="nnz")
-    arrs = D.place_1d(part, mesh1, "data")
-    xs = jax.device_put(jnp.asarray(x), jax.NamedSharding(mesh1, P("data")))
-    fn = D.spmv_1d(part, mesh1, "data")
-    jax.block_until_ready(fn.jitted(arrs, xs))
-    ts = []
-    for _ in range(5):
-        t0 = time.perf_counter(); jax.block_until_ready(fn.jitted(arrs, xs))
-        ts.append(time.perf_counter() - t0)
-    print(f"dist.{spec.name}.1D.coo.nnz,{np.median(ts)*1e6:.1f},parts=8")
-    part = partition_2d(a, (4, 2), fmt="coo", scheme="equally-sized")
-    arrs = D.place_2d(part, mesh2, ("data", "model"))
-    xs = jax.device_put(jnp.asarray(x), jax.NamedSharding(mesh2, P("model")))
-    fn = D.spmv_2d(part, mesh2, ("data", "model"), merge="psum_scatter")
-    jax.block_until_ready(fn.jitted(arrs, xs))
-    ts = []
-    for _ in range(5):
-        t0 = time.perf_counter(); jax.block_until_ready(fn.jitted(arrs, xs))
-        ts.append(time.perf_counter() - t0)
-    print(f"dist.{spec.name}.2D.equally-sized,{np.median(ts)*1e6:.1f},grid=4x2")
+smoke = os.environ.get("BENCH_SMOKE") == "1"
+specs = paper_small_suite(1)[:1] if smoke \
+    else paper_large_suite(1)[:4] + paper_large_suite(1)[-3:]
+for spec in specs:
+    sm = SparseMatrix.from_dense(spec.build())
+    x = np.random.default_rng(0).standard_normal(sm.cols).astype(np.float32)
+    for scheme, grid in [("1d.nnz", None), ("2d.equally-sized", (4, 2))]:
+        exe = sm.plan(scheme=scheme, grid=grid,
+                      devices=jax.devices()).compile()
+        exe(x)  # warm the vector-shaped trace
+        ts = []
+        for _ in range(5):
+            t0 = time.perf_counter(); exe(x)
+            ts.append(time.perf_counter() - t0)
+        # label from the FITTED plan: a non-divisible matrix may have fallen
+        # back to 1D, and the row must say what actually ran
+        derived = f"grid={'x'.join(map(str, exe.plan.grid))}"
+        print(f"dist.{spec.name}.{exe.plan.scheme_id},"
+              f"{np.median(ts)*1e6:.1f},{derived}")
 """
-    proc = subprocess.run([sys.executable, "-c", code], env=env,
+
+
+def _distributed_block(smoke: bool = False):
+    """Run the 8-device distributed api-pipeline timing in a subprocess."""
+    print("# --- distributed: 1D/2D end-to-end on 8 fake devices (repro.api)")
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    if smoke:
+        env["BENCH_SMOKE"] = "1"
+    proc = subprocess.run([sys.executable, "-c", _DISTRIBUTED_CODE], env=env,
                           capture_output=True, text=True, timeout=1800)
     sys.stdout.write(proc.stdout)
     if proc.returncode != 0:
@@ -68,12 +70,35 @@ for spec in paper_large_suite(1)[:4] + paper_large_suite(1)[-3:]:
         raise SystemExit("distributed benchmark failed")
 
 
+def _smoke() -> None:
+    """CI wiring check: every module imports, two blocks actually run."""
+    from . import (  # noqa: F401  (import = the wiring under test)
+        common,
+        engine_throughput,
+        fig9_single_core,
+        fig11_16_1d,
+        fig17_24_2d,
+        fig25_29_compare,
+    )
+
+    print("name,us_per_call,derived")
+    fig9_single_core.run(1)
+    _distributed_block(smoke=True)
+    print("# smoke OK")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=int, default=1)
     ap.add_argument("--quick", action="store_true",
                     help="skip the slower distributed block")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-shape CPU wiring check (CI)")
     args = ap.parse_args()
+
+    if args.smoke:
+        _smoke()
+        return
 
     from . import fig9_single_core, fig11_16_1d, fig17_24_2d, fig25_29_compare
 

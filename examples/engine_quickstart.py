@@ -1,8 +1,9 @@
 """Engine quickstart — serve a stream of SpMV requests against named matrices.
 
-The one-shot pipeline (examples/spmv_end_to_end.py) re-partitions, re-places
-and re-traces on every multiply.  The serving engine does all of that once at
-``register`` and then answers ``multiply`` from a cached compiled plan; the
+The one-shot pipeline (repro.api: SparseMatrix -> ExecutionPlan -> Executor,
+see examples/spmv_end_to_end.py) re-partitions, re-places and re-traces on
+every compile.  The serving engine runs that chain once at ``register`` and
+then answers ``multiply`` from a cached compiled executor; the deadline-aware
 micro-batcher coalesces concurrent requests into SpMM calls.
 
 Run with multiple fake devices to see the real distributed plans:

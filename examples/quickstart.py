@@ -1,38 +1,49 @@
-"""Quickstart: SparseP formats, kernels, and adaptive scheme selection.
+"""Quickstart: the repro.api pipeline — SparseMatrix -> ExecutionPlan -> Executor.
+
+Every SpMV path (any container format, XLA or Pallas kernels, single-device
+or distributed) runs through the same three steps:
+
+    sm  = SparseMatrix.from_dense(a)     # wrap + stats (or from_scipy /
+                                         #   from_parts / from_format)
+    pln = sm.plan(...)                   # inspectable ExecutionPlan
+    y   = pln.compile()(x)               # Executor: y = exe(x), Y = exe.batch(X)
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
-import jax.numpy as jnp
 
-from repro.core import formats as F
-from repro.core.adaptive import HardwareModel, select_scheme
-from repro.core.spmv import spmv
-from repro.core.stats import compute_stats
+from repro.api import SparseMatrix
+from repro.core.adaptive import HardwareModel
 from repro.data import scale_free_matrix
 
-# 1. Build a scale-free sparse matrix (web-graph-like, paper Table 4 class).
+# 1. Wrap a scale-free sparse matrix (web-graph-like, paper Table 4 class).
+#    SparseMatrix carries the paper's Table-4 statistics and classification.
 a = scale_free_matrix(rows=1024, cols=1024, nnz_target=6 * 1024, seed=0)
-stats = compute_stats(a)
-print(f"matrix: {stats.rows}x{stats.cols}, nnz={stats.nnz}, "
-      f"NNZ-r-std={stats.nnz_r_std:.1f} -> "
-      f"{'scale-free' if stats.is_scale_free else 'regular'}")
+sm = SparseMatrix.from_dense(a)
+st = sm.stats
+print(f"matrix: {sm} NNZ-r-std={st.nnz_r_std:.1f} -> "
+      f"{'scale-free' if st.is_scale_free else 'regular'}")
 
-# 2. SpMV through each compressed format (XLA path and Pallas kernels).
+# 2. One call signature across every compressed format and kernel impl.
 x = np.random.default_rng(0).standard_normal(1024).astype(np.float32)
 y_ref = a @ x
-for name, mat in [
-    ("CSR", F.dense_to_csr(a)),
-    ("COO", F.dense_to_coo(a)),
-    ("BCSR", F.dense_to_bcsr(a, block=(8, 128))),
-    ("BCOO", F.dense_to_bcoo(a, block=(8, 128))),
-]:
+for fmt in ("csr", "coo", "bcsr", "bcoo"):
     for impl in ("xla", "pallas"):
-        y = spmv(mat, jnp.asarray(x), impl=impl)
-        err = float(np.abs(np.asarray(y) - y_ref).max())
-        print(f"  {name:5s} [{impl:6s}] max|err| = {err:.2e}")
+        exe = sm.plan(fmt=fmt, impl=impl, block=(8, 128)).compile()
+        err = float(np.abs(exe(x) - y_ref).max())
+        print(f"  {fmt.upper():5s} [{impl:6s}] max|err| = {err:.2e}")
 
-# 3. Ask the adaptive selector (paper Rec. #3) what to run on a 256-chip pod.
-plan = select_scheme(stats, HardwareModel.single_pod())
-print(f"adaptive plan: {plan.partitioning}/{plan.scheme} fmt={plan.fmt} "
-      f"merge={plan.merge}\n  reason: {plan.reason}")
+# 3. Batched SpMM through the same executor (amortizes the matrix traffic).
+X = np.random.default_rng(1).standard_normal((1024, 4)).astype(np.float32)
+exe = sm.plan(fmt="coo").compile()
+print(f"  batch(X): max|err| = {float(np.abs(exe.batch(X) - a @ X).max()):.2e}")
+
+# 4. The adaptive planner (paper Rec. #3): scheme="auto" picks the
+#    (partitioning, balancing, format) tuple for the matrix + hardware and
+#    returns it as a first-class, inspectable plan.  fit=False shows the
+#    256-chip-pod plan as-is (fitting would collapse the grid to this
+#    machine's single device); passing mesh=/devices= to sm.plan() compiles
+#    the fitted plan as a distributed shard_map program (see
+#    examples/spmv_end_to_end.py).
+plan = sm.plan(scheme="auto", hw=HardwareModel.single_pod(), fit=False)
+print(plan.describe())

@@ -1,5 +1,6 @@
 """End-to-end distributed SpMV — the paper's full pipeline (Fig. 4) on a
-device mesh: partition -> place -> load(x) -> kernel -> merge -> assemble.
+device mesh, driven through repro.api: partition -> place -> load(x) ->
+kernel -> merge -> assemble, all behind ``plan(...).compile()``.
 
 Run with multiple fake devices to see real collectives:
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -12,61 +13,50 @@ if "XLA_FLAGS" not in os.environ:  # default to 8 fake devices when run bare
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 
-from repro import compat
-from repro.compat import P
+from repro.api import SparseMatrix, plan_from_partitioned
 from repro.core import distributed as D
-from repro.core.partition import partition_1d, partition_2d
-from repro.core.stats import compute_stats
 from repro.data import paper_large_suite
 
 n_dev = len(jax.devices())
 print(f"devices: {n_dev}")
 spec = paper_large_suite(1)[11]  # web-Google miniature (scale-free)
 a = spec.build()
-st = compute_stats(a)
-x = np.random.default_rng(0).standard_normal(a.shape[1]).astype(np.float32)
+sm = SparseMatrix.from_dense(a)
+st = sm.stats
+x = np.random.default_rng(0).standard_normal(sm.cols).astype(np.float32)
 y_ref = a @ x
 print(f"{spec.name}: {st.rows}x{st.cols} nnz={st.nnz} "
       f"({'scale-free' if st.is_scale_free else 'regular'})")
 
 # ---- 1D: broadcast x (all-gather), element-granular nnz balance ------------
-mesh = compat.make_mesh((n_dev,), ("data",))
-part = partition_1d(a, n_dev, fmt="coo", balance="nnz")
-arrs = D.place_1d(part, mesh, "data")
-xs = jax.device_put(jnp.asarray(x), jax.NamedSharding(mesh, P("data")))
-out = D.spmv_1d(part, mesh, "data")(arrs, xs)
-err = np.abs(D.assemble_rows(out) - y_ref).max()
-print(f"1D COO.nnz     pad_eff={part.padding_efficiency:.3f} max|err|={err:.2e}")
+exe1 = sm.plan(scheme="1d.nnz", devices=jax.devices()).compile()
+err = np.abs(exe1(x) - y_ref).max()
+print(f"1D COO.nnz     pad_eff={exe1.part.padding_efficiency:.3f} "
+      f"max|err|={err:.2e}")
 
 # ---- 1D ring: comm/compute-overlapped broadcast (beyond paper) -------------
-part_r, counts = D.bucket_by_source_shard(part, n_dev)
-arrs_r = D.place_1d(part_r, mesh, "data")
-out = D.spmv_1d_ring(part_r, counts, mesh, "data")(arrs_r, xs)
-err = np.abs(D.assemble_rows(out) - y_ref).max()
+part_r, counts = D.bucket_by_source_shard(exe1.part, n_dev)
+ring = plan_from_partitioned(part_r, exe1.mesh, ring=True, ring_counts=counts,
+                             matrix=sm).compile()
+err = np.abs(ring(x) - y_ref).max()
 print(f"1D ring        overlapped broadcast        max|err|={err:.2e}")
 
 # ---- 2D equally-sized: sharded x, in-network merge (psum_scatter) ----------
-R, C = n_dev // 2, 2
-mesh2 = compat.make_mesh((R, C), ("data", "model"))
-part2 = partition_2d(a, (R, C), fmt="coo", scheme="equally-sized")
-arrs2 = D.place_2d(part2, mesh2, ("data", "model"))
-xs2 = jax.device_put(jnp.asarray(x), jax.NamedSharding(mesh2, P("model")))
-out2 = D.spmv_2d(part2, mesh2, ("data", "model"), merge="psum_scatter")(arrs2, xs2)
-err = np.abs(D.assemble_rows(out2) - y_ref).max()
+exe2 = sm.plan(scheme="2d.equally-sized", grid=(n_dev // 2, 2),
+               devices=jax.devices()).compile()
+err = np.abs(exe2(x) - y_ref).max()
 print(f"2D equally-sized/psum_scatter              max|err|={err:.2e}")
 
 # ---- power iteration: SpMV as the inner loop of a real workload ------------
 sq = min(a.shape)
 a_sq = a[:sq, :sq] + np.eye(sq, dtype=np.float32) * 0.1
-part_sq = partition_1d(a_sq, n_dev, fmt="coo", balance="nnz")
-arrs_sq = D.place_1d(part_sq, mesh, "data")
-fn = D.spmv_1d(part_sq, mesh, "data")
+exe_sq = SparseMatrix.from_dense(a_sq).plan(
+    scheme="1d.nnz", devices=jax.devices()
+).compile()
 v = np.ones(sq, np.float32) / np.sqrt(sq)
 for it in range(10):
-    vs = jax.device_put(jnp.asarray(v), jax.NamedSharding(mesh, P("data")))
-    y = D.assemble_rows(fn(arrs_sq, vs))
+    y = exe_sq(v)
     v = y / np.linalg.norm(y)
 lam = float(v @ (a_sq @ v))
 print(f"power iteration: dominant eigenvalue ~ {lam:.4f}")

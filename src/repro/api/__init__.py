@@ -1,0 +1,45 @@
+"""repro.api — one planner→executor pipeline for every SpMV path.
+
+SparseP's central finding is that the winning (format, partitioning,
+balancing) tuple is matrix- and hardware-dependent (paper Obs. 15).  This
+package is the single public surface that makes acting on that tractable:
+
+    from repro.api import SparseMatrix
+
+    sm  = SparseMatrix.from_dense(a)          # or from_scipy / from_parts /
+                                              # from_format
+    pln = sm.plan(scheme="auto", impl="xla")  # inspectable ExecutionPlan
+    exe = pln.compile()                       # Executor: one call signature
+    y   = exe(x)                              # np rows; exe.batch(X) for SpMM
+
+``plan(mesh=...)`` / ``plan(devices=...)`` produce the distributed shard_map
+program instead of the single-device kernels; ``SpmvEngine`` adds plan
+caching, micro-batching and telemetry on top of exactly this chain.  The
+pre-api entry points (``repro.core.spmv.spmv``, ``repro.kernels.ops.spmv``,
+``repro.core.distributed``, ``repro.engine.SpmvEngine``) remain available —
+the first two as thin shims over the internal backends, the engine re-based
+on this pipeline.
+"""
+from .executor import (
+    AXES_2D,
+    AXIS_1D,
+    Executor,
+    MeshExecutor,
+    SingleDeviceExecutor,
+)
+from .matrix import SparseMatrix, fingerprint_matrix
+from .plan import ExecutionPlan, fit_plan, plan_from_partitioned, resolve_scheme
+
+__all__ = [
+    "SparseMatrix",
+    "ExecutionPlan",
+    "Executor",
+    "SingleDeviceExecutor",
+    "MeshExecutor",
+    "fit_plan",
+    "resolve_scheme",
+    "plan_from_partitioned",
+    "fingerprint_matrix",
+    "AXIS_1D",
+    "AXES_2D",
+]

@@ -1,0 +1,209 @@
+"""Executor protocol — one call signature for every SpMV path.
+
+An :class:`Executor` is the compiled end of the ``SparseMatrix ->
+ExecutionPlan -> Executor`` pipeline: ``y = exe(x)`` for a single vector and
+``Y = exe.batch(X)`` for multi-RHS SpMM, regardless of whether the plan runs
+
+  * on a single device through :mod:`repro.kernels.ops` (XLA oracles or the
+    Pallas TPU kernels), or
+  * distributed over a mesh through :mod:`repro.core.distributed` shard_map
+    programs (1D broadcast-x, 1D ring, 2D merge-partials).
+
+Both return host ``np.ndarray`` rows — the serving contract the engine and
+the batcher build on.  The mesh executor additionally exposes the three
+paper phases (``place`` / ``run_raw`` / ``assemble``, Fig. 4 load / kernel /
+retrieve) so the engine's telemetry can time them separately, and
+``release()`` to proactively free the device-placed matrix (plan-cache
+eviction).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compat import NamedSharding
+from repro.core import distributed as D
+from repro.core.partition import PartitionedMatrix
+from repro.kernels import ops
+
+__all__ = ["Executor", "SingleDeviceExecutor", "MeshExecutor",
+           "AXIS_1D", "AXES_2D"]
+
+# Canonical mesh axis names for api-built meshes (the engine reuses these).
+AXIS_1D = "parts"
+AXES_2D = ("rows", "cols")
+
+
+class Executor:
+    """Common surface: ``exe(x) -> y`` and ``exe.batch(X) -> Y`` (host rows)."""
+
+    plan = None  # the ExecutionPlan this executor was compiled from
+
+    def __call__(self, x) -> np.ndarray:
+        raise NotImplementedError
+
+    def batch(self, X) -> np.ndarray:
+        raise NotImplementedError
+
+    def release(self) -> None:
+        """Free device buffers held by this executor (idempotent)."""
+
+    # -- shared input validation ------------------------------------------
+
+    def _check_x(self, x, cols: int, dtype) -> np.ndarray:
+        x = np.asarray(x)
+        if not np.can_cast(x.dtype, dtype, casting="same_kind"):
+            raise TypeError(
+                f"x dtype {x.dtype} cannot safely cast to matrix dtype "
+                f"{np.dtype(dtype)}"
+            )
+        x = x.astype(dtype, copy=False)
+        if x.shape[0] != cols:
+            raise ValueError(f"x has {x.shape[0]} rows, matrix has {cols} cols")
+        return x
+
+
+class SingleDeviceExecutor(Executor):
+    """kernels.ops-backed executor (XLA oracle or Pallas kernels)."""
+
+    def __init__(self, plan, container, impl: str, interpret: bool = True):
+        self.plan = plan
+        self.container = container
+        self.impl = impl
+        self.interpret = interpret
+
+    def __call__(self, x) -> np.ndarray:
+        x = self._check_x(x, self.container.cols, self.container.dtype)
+        if x.ndim == 2:
+            return self.batch(x)
+        y = ops.spmv(self.container, jnp.asarray(x), impl=self.impl,
+                     interpret=self.interpret)
+        return np.asarray(y)
+
+    def batch(self, X) -> np.ndarray:
+        X = self._check_x(X, self.container.cols, self.container.dtype)
+        if X.ndim != 2:
+            raise ValueError(f"batch expects X of shape (cols, B); got {X.shape}")
+        if self.impl == "xla":
+            return np.asarray(ops.spmm(self.container, jnp.asarray(X)))
+        # Pallas kernels are single-RHS: issue per column.
+        cols = [ops.spmv(self.container, jnp.asarray(X[:, j]), impl=self.impl,
+                         interpret=self.interpret) for j in range(X.shape[1])]
+        return np.stack([np.asarray(c) for c in cols], axis=1)
+
+
+class MeshExecutor(Executor):
+    """shard_map-backed executor: partitioned, placed and traced once.
+
+    Owns everything the one-shot path rebuilds per call: the partitioned
+    matrix, its device placement, and the jitted program (wrapped with a
+    trace counter so callers can assert steady-state zero-retrace).
+    """
+
+    def __init__(
+        self,
+        plan,
+        part: PartitionedMatrix,
+        mesh,
+        axes: tuple,
+        program: Callable,  # D.spmv_* call object with .jitted
+        x_spec,
+        x_pad: int,
+        merge: str,
+    ):
+        self.plan = plan
+        self.part = part
+        self.mesh = mesh
+        self.axes = axes
+        self.program = program
+        self.x_spec = x_spec
+        self.x_pad = x_pad
+        self.merge = merge
+        self.arrays = None  # device-placed matrix pytree (set by place_matrix)
+        self.build_seconds = 0.0
+        self.assemble_meta = dict(
+            row_start=np.asarray(part.row_start),
+            row_extent=np.asarray(part.row_extent),
+            rows=part.shape[0],
+        )
+        trace_box = {"count": 0}
+        inner_jit = program.jitted
+
+        @jax.jit
+        def run(arrs, xs):
+            trace_box["count"] += 1  # python side effect: fires per (re)trace
+            return inner_jit(arrs, xs)
+
+        self.run = run
+        self.trace_count_fn = lambda: trace_box["count"]
+
+    @property
+    def trace_count(self) -> int:
+        return self.trace_count_fn()
+
+    def place_matrix(self, placed_arrays) -> "MeshExecutor":
+        self.arrays = placed_arrays
+        return self
+
+    # -- the paper's three phases (Fig. 4), individually timeable ---------
+
+    def place(self, x) -> jax.Array:
+        """Load phase: validate, pad and place x on the mesh (blocks)."""
+        x = self._check_x(x, self.part.shape[1], self.part.dtype)
+        if self.x_pad != x.shape[0]:
+            x = np.pad(x, ((0, self.x_pad - x.shape[0]),)
+                       + ((0, 0),) * (x.ndim - 1))
+        xs = jax.device_put(jnp.asarray(x), NamedSharding(self.mesh, self.x_spec))
+        return jax.block_until_ready(xs)
+
+    def run_raw(self, xs) -> jax.Array:
+        """Kernel phase: the jitted shard_map program (blocks)."""
+        if self.arrays is None:
+            raise RuntimeError("executor released or never placed; recompile")
+        return jax.block_until_ready(self.run(self.arrays, xs))
+
+    def assemble(self, raw) -> np.ndarray:
+        """Retrieve phase: fetch + assemble global rows on the host."""
+        meta = self.assemble_meta
+        if self.plan is not None and self.plan.partitioning == "1d":
+            out = D.SpmvOutput(raw, merge="none", **meta)
+        elif self.merge == "global":
+            out = D.SpmvOutput(raw, merge="global",
+                               replicated_global=raw[0, 0][: meta["rows"]],
+                               **meta)
+        else:
+            out = D.SpmvOutput(raw, merge=self.merge, **meta)
+        return D.assemble_rows(out)
+
+    # -- public surface ----------------------------------------------------
+
+    def __call__(self, x) -> np.ndarray:
+        return self.assemble(self.run_raw(self.place(x)))
+
+    def batch(self, X) -> np.ndarray:
+        X = np.asarray(X)
+        if X.ndim != 2:
+            raise ValueError(f"batch expects X of shape (cols, B); got {X.shape}")
+        return self(X)
+
+    def warmup(self) -> None:
+        """Trace + compile the vector-shaped program off the request path."""
+        self.run_raw(self.place(np.zeros(self.part.shape[1], self.part.dtype)))
+
+    def release(self) -> None:
+        """Delete the device-placed matrix arrays (plan-cache eviction).
+
+        Makes the executor unusable; callers must recompile.  Idempotent and
+        tolerant of backends without explicit deletion.
+        """
+        arrays, self.arrays = self.arrays, None
+        if arrays is None:
+            return
+        for leaf in jax.tree_util.tree_leaves(arrays):
+            try:
+                leaf.delete()
+            except Exception:
+                pass

@@ -1,0 +1,289 @@
+"""SparseMatrix — the single front door of the SpMV pipeline.
+
+Wraps a sparse matrix from any source (dense ndarray, scipy.sparse, raw COO
+triplets, or an existing container format from :mod:`repro.core.formats`)
+together with its sparsity statistics and content fingerprint, and exposes
+one method chain for every execution path:
+
+    sm  = SparseMatrix.from_dense(a)
+    pln = sm.plan(scheme="auto", impl="xla")        # ExecutionPlan
+    exe = pln.compile()                             # Executor
+    y   = exe(x)                                    # host rows
+
+Single-device runs keep the chosen container format and dispatch through
+kernels.ops; passing ``mesh=`` or ``devices=`` to ``plan`` produces the
+distributed shard_map program.  ``SpmvEngine`` layers caching, batching and
+telemetry on top of exactly this chain.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro import compat
+from repro.core import formats as F
+from repro.core.adaptive import HardwareModel, Plan, estimate_time
+from repro.core.stats import MatrixStats, compute_stats
+
+from .executor import AXES_2D, AXIS_1D
+from .plan import ExecutionPlan, resolve_scheme
+
+__all__ = ["SparseMatrix", "fingerprint_matrix"]
+
+_CONTAINERS = (F.CSR, F.COO, F.BCSR, F.BCOO)
+_FMT_OF = {F.CSR: "csr", F.COO: "coo", F.BCSR: "bcsr", F.BCOO: "bcoo"}
+
+
+def fingerprint_matrix(a: np.ndarray) -> str:
+    """Stable content hash of a dense matrix's sparsity structure + values."""
+    a = np.ascontiguousarray(a)
+    h = hashlib.sha256()
+    h.update(repr((a.shape, a.dtype.str)).encode())
+    ri, ci = np.nonzero(a)
+    h.update(ri.astype(np.int64).tobytes())
+    h.update(ci.astype(np.int64).tobytes())
+    h.update(np.ascontiguousarray(a[ri, ci]).tobytes())
+    return h.hexdigest()[:16]
+
+
+class SparseMatrix:
+    """A sparse matrix plus its stats, behind every SpMV entry point."""
+
+    def __init__(self, *, dense=None, triplets=None, container=None,
+                 shape: Tuple[int, int] = None, dtype=None,
+                 stats_block: Tuple[int, int] = (8, 16)):
+        if dense is None and triplets is None and container is None:
+            raise ValueError("SparseMatrix needs a dense array, triplets or "
+                             "a container; use the from_* constructors")
+        self._dense = dense
+        self._triplets = triplets  # (rowind, colind, values)
+        self._containers: dict = {}
+        if container is not None:
+            self._containers[_FMT_OF[type(container)]] = container
+        self.shape = tuple(shape)
+        self.dtype = np.dtype(dtype)
+        self._stats_block = stats_block
+        self._stats: Optional[MatrixStats] = None
+        self._fingerprint: Optional[str] = None
+
+    # ------------------------------------------------------------ constructors
+
+    @classmethod
+    def from_dense(cls, a, dtype=None,
+                   stats_block: Tuple[int, int] = (8, 16)) -> "SparseMatrix":
+        """Wrap a dense (host) array; ``dtype`` optionally converts values."""
+        a = np.asarray(a)
+        if a.ndim != 2:
+            raise ValueError(f"expected a 2D matrix, got shape {a.shape}")
+        if dtype is not None:
+            a = a.astype(dtype)
+        return cls(dense=a, shape=a.shape, dtype=a.dtype,
+                   stats_block=stats_block)
+
+    @classmethod
+    def from_scipy(cls, m, dtype=None) -> "SparseMatrix":
+        """Wrap anything with scipy.sparse's ``tocoo()`` protocol."""
+        if not hasattr(m, "tocoo"):
+            raise TypeError(f"{type(m).__name__} has no .tocoo(); "
+                            "expected a scipy.sparse matrix")
+        coo = m.tocoo()
+        return cls.from_parts(coo.row, coo.col, coo.data, coo.shape,
+                              dtype=dtype)
+
+    @classmethod
+    def from_parts(cls, rowind, colind, values, shape,
+                   dtype=None) -> "SparseMatrix":
+        """Wrap raw COO triplets (duplicate coordinates are summed)."""
+        rowind = np.asarray(rowind, np.int64).ravel()
+        colind = np.asarray(colind, np.int64).ravel()
+        values = np.asarray(values).ravel()
+        if dtype is not None:
+            values = values.astype(dtype)
+        if not (len(rowind) == len(colind) == len(values)):
+            raise ValueError("rowind/colind/values lengths differ")
+        rows, cols = shape
+        if len(rowind) and (rowind.min() < 0 or rowind.max() >= rows
+                            or colind.min() < 0 or colind.max() >= cols):
+            raise ValueError(f"indices out of range for shape {tuple(shape)}")
+        return cls(triplets=(rowind, colind, values), shape=(rows, cols),
+                   dtype=values.dtype)
+
+    @classmethod
+    def from_format(cls, container) -> "SparseMatrix":
+        """Wrap an existing CSR/COO/BCSR/BCOO container."""
+        if not isinstance(container, _CONTAINERS):
+            raise TypeError(f"unknown container {type(container).__name__}")
+        return cls(container=container, shape=container.shape,
+                   dtype=np.dtype(container.dtype))
+
+    # ------------------------------------------------------------ inspection
+
+    @property
+    def rows(self) -> int:
+        return self.shape[0]
+
+    @property
+    def cols(self) -> int:
+        return self.shape[1]
+
+    def dense(self) -> np.ndarray:
+        """Materialize (and cache) the dense host array."""
+        if self._dense is None:
+            if self._triplets is not None:
+                ri, ci, vals = self._triplets
+                a = np.zeros(self.shape, self.dtype)
+                np.add.at(a, (ri, ci), vals)
+            else:
+                container = next(iter(self._containers.values()))
+                a = np.asarray(F.to_dense(container))
+            self._dense = a
+        return self._dense
+
+    @property
+    def stats(self) -> MatrixStats:
+        """Paper Table-4 statistics (drives the adaptive scheme selection)."""
+        if self._stats is None:
+            if self._dense is None and self._triplets is not None:
+                ri, ci, _ = self._triplets
+                self._stats = compute_stats((ri, ci, self.shape),
+                                            block=self._stats_block)
+            else:
+                self._stats = compute_stats(self.dense(),
+                                            block=self._stats_block)
+        return self._stats
+
+    @property
+    def nnz(self) -> int:
+        return self.stats.nnz
+
+    def fingerprint(self) -> str:
+        """Content hash — the identity under which compiled plans are cached."""
+        if self._fingerprint is None:
+            self._fingerprint = fingerprint_matrix(self.dense())
+        return self._fingerprint
+
+    def container(self, fmt: str, block: Tuple[int, int] = (8, 16),
+                  dtype=None):
+        """Build (and cache) the requested container format."""
+        dtype = self.dtype if dtype is None else np.dtype(dtype)
+        key = fmt if dtype == self.dtype else f"{fmt}:{dtype.str}"
+        got = self._containers.get(key)
+        if got is not None and (fmt not in ("bcsr", "bcoo")
+                                or got.block == tuple(block)):
+            return got
+        a = self.dense()
+        if a.dtype != dtype:
+            a = a.astype(dtype)
+        if fmt == "csr":
+            built = F.dense_to_csr(a)
+        elif fmt == "coo":
+            built = F.dense_to_coo(a)
+        elif fmt == "bcsr":
+            built = F.dense_to_bcsr(a, block=tuple(block))
+        elif fmt == "bcoo":
+            built = F.dense_to_bcoo(a, block=tuple(block))
+        else:
+            raise ValueError(f"unknown format {fmt!r}")
+        self._containers[key] = built
+        return built
+
+    def __repr__(self) -> str:
+        return (f"SparseMatrix({self.rows}x{self.cols}, nnz={self.nnz}, "
+                f"dtype={self.dtype.name})")
+
+    # ------------------------------------------------------------ planning
+
+    def plan(
+        self,
+        *,
+        scheme="auto",
+        impl: str = "xla",
+        hw: Optional[HardwareModel] = None,
+        mesh=None,
+        devices=None,
+        partitioning: Optional[str] = None,
+        fmt: Optional[str] = None,
+        merge: Optional[str] = None,
+        grid: Optional[tuple] = None,
+        block: Tuple[int, int] = (8, 16),
+        interpret: bool = True,
+        fit: bool = True,
+    ) -> ExecutionPlan:
+        """Resolve scheme + placement into an inspectable ExecutionPlan.
+
+        scheme       : "auto" (paper Rec. #3 rules fitted to the pool), a
+                       string like "1d.nnz" / "2d.equally-sized", or an
+                       explicit adaptive.Plan.
+        impl         : "xla" (any backend, the distributed path) or "pallas"
+                       (TPU kernels; single-device only, interpret on CPU).
+        mesh/devices : give either to plan a distributed shard_map program;
+                       omit both for single-device execution.
+        partitioning : force "1d"/"2d" over the adaptive choice.
+        fmt/merge/grid: override single dimensions of the resolved scheme.
+        fit          : False inspects the paper plan for ``hw`` as-is, without
+                       fitting its grid to this pool (not compilable unless
+                       the pool happens to match).
+        """
+        if impl not in ("xla", "pallas"):
+            raise ValueError(f"unknown impl {impl!r}: 'xla' or 'pallas'")
+        if mesh is not None and devices is not None:
+            raise ValueError("pass mesh= or devices=, not both")
+        distributed = mesh is not None or devices is not None
+        if distributed and impl == "pallas":
+            raise ValueError(
+                "impl='pallas' is single-device (the kernels run per chip); "
+                "distributed plans use the XLA shard_map path"
+            )
+        if mesh is not None:
+            mesh_shape = tuple(mesh.devices.shape)
+            n_devices = int(np.prod(mesh_shape))
+            if grid is None and len(mesh_shape) == 2 \
+                    and not isinstance(scheme, Plan):
+                grid = mesh_shape  # prefer grids that match the given mesh
+        elif devices is not None:
+            devices = list(devices)
+            n_devices = len(devices)
+        else:
+            n_devices = 1
+        plan = resolve_scheme(
+            self.stats, self.shape, n_devices, scheme, hw=hw,
+            partitioning=partitioning, fmt=fmt, merge=merge, grid=grid,
+            block=block, fit=fit,
+        )
+        if mesh is not None:
+            # fail fast: the fitted plan must lay out on the given mesh, or
+            # compile() would crash deep inside placement instead
+            want = ((plan.grid[0],) if plan.partitioning == "1d"
+                    else tuple(plan.grid))
+            if mesh_shape != want:
+                raise ValueError(
+                    f"mesh shape {mesh_shape} does not match the "
+                    f"{plan.partitioning} plan grid {tuple(plan.grid)}; "
+                    "pass grid=/scheme= that fits the mesh, or use devices= "
+                    "and let plan() build the mesh"
+                )
+        if mesh is None and distributed:
+            if plan.partitioning == "1d":
+                mesh = compat.make_mesh((plan.grid[0],), (AXIS_1D,),
+                                        devices=devices[: plan.grid[0]])
+            else:
+                n = plan.grid[0] * plan.grid[1]
+                mesh = compat.make_mesh(tuple(plan.grid), AXES_2D,
+                                        devices=devices[:n])
+        hw = hw if hw is not None else HardwareModel(chips=max(1, n_devices))
+        try:
+            est = estimate_time(self.stats, plan, hw,
+                                dtype_bytes=self.dtype.itemsize)
+        except Exception:
+            est = {}
+        return ExecutionPlan(
+            matrix=self, scheme=plan, impl=impl,
+            mesh=mesh if distributed else None, dtype=self.dtype,
+            block=tuple(block), interpret=interpret, hw=hw, estimate=est,
+        )
+
+    def compile(self, **plan_kwargs):
+        """Shorthand: ``.plan(**kw).compile()``."""
+        return self.plan(**plan_kwargs).compile()

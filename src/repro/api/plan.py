@@ -1,0 +1,358 @@
+"""ExecutionPlan — the first-class, inspectable middle of the pipeline.
+
+``SparseMatrix.plan(...)`` resolves *what to run* (an adaptive
+:class:`repro.core.adaptive.Plan`: partitioning, balancing scheme, format,
+merge collective, grid), fits it to the actual device pool, and returns an
+:class:`ExecutionPlan` that additionally pins *how to run it* (impl, mesh,
+dtype, interpret) plus the analytic time estimate.  ``.compile()`` turns it
+into an :class:`repro.api.executor.Executor`.
+
+This subsumes the two plan notions that predate it: ``adaptive.Plan`` (the
+paper-rule scheme choice) is carried as ``.scheme``; the engine's internal
+plan dict became the compiled executor's fields.  The fitting rules
+(divisibility of 2D grids, CSR row-granularity limits, block-format
+downgrades) live here so the engine, the benchmarks and direct api users all
+agree on them.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.compat import P
+from repro.core import distributed as D
+from repro.core.adaptive import HardwareModel, Plan, select_scheme
+from repro.core.partition import (
+    BALANCE_1D,
+    SCHEMES_2D,
+    PartitionedMatrix,
+    partition_1d,
+    partition_2d,
+)
+from repro.core.stats import MatrixStats
+
+from .executor import AXES_2D, AXIS_1D, Executor, MeshExecutor, SingleDeviceExecutor
+
+__all__ = ["ExecutionPlan", "fit_plan", "resolve_scheme", "plan_from_partitioned"]
+
+FORMATS = ("coo", "csr", "bcoo", "bcsr")
+
+
+# ---------------------------------------------------------------------------
+# scheme resolution + device fitting (shared by api users and the engine)
+# ---------------------------------------------------------------------------
+
+
+def _plan_from_string(spec: str, n_devices: int, fmt: Optional[str],
+                      merge: Optional[str]) -> Plan:
+    """Parse "1d" / "1d.nnz" / "2d" / "2d.equally-sized" into a Plan.
+
+    The grid is left empty — ``fit_plan`` picks one for the device pool
+    (near-square for 2D when the caller expressed no preference).
+    """
+    head, _, tail = spec.partition(".")
+    fmt = fmt or "coo"
+    if head == "1d":
+        balance = tail or "nnz"
+        if balance not in BALANCE_1D:
+            raise ValueError(f"unknown 1D balance {balance!r}; one of {BALANCE_1D}")
+        return Plan("1d", balance, fmt, merge or "ppermute", (n_devices, 1),
+                    f"user scheme {spec!r}")
+    if head == "2d":
+        scheme = tail or "equally-sized"
+        if scheme not in SCHEMES_2D:
+            raise ValueError(f"unknown 2D scheme {scheme!r}; one of {SCHEMES_2D}")
+        default = "psum_scatter" if scheme == "equally-sized" else "global"
+        return Plan("2d", scheme, fmt, merge or default, (), f"user scheme {spec!r}")
+    raise ValueError(
+        f"unknown scheme {spec!r}: expected 'auto', '1d[.balance]', "
+        f"'2d[.scheme]' or an adaptive.Plan"
+    )
+
+
+def fit_plan(plan: Plan, shape: tuple, n_devices: int,
+             block: Tuple[int, int]) -> Plan:
+    """Adapt a paper plan to the device pool + SPMD divisibility rules.
+
+    2D equally-sized requires rows % R == 0 and cols % C == 0 (and
+    psum_scatter additionally (rows/R) % C == 0, else downgrade to psum);
+    when no factorization of the device count fits, fall back to the 1D
+    element-balanced plan, which has no divisibility constraints.  An empty
+    ``plan.grid`` means "no preference" — 2D then prefers near-square grids.
+    """
+    n = n_devices
+    rows, cols = shape
+    fmt = plan.fmt
+    if fmt in ("bcoo", "bcsr") and not (
+        rows % block[0] == 0 and cols % block[1] == 0
+    ):
+        fmt = "coo"  # block tiling must cover the matrix exactly
+    if plan.partitioning == "1d":
+        balance = plan.scheme if plan.scheme in BALANCE_1D else "nnz"
+        if fmt in ("csr", "bcsr") and balance == "nnz":
+            balance = "nnz-rgrn"
+        return Plan("1d", balance, fmt, "ppermute", (n, 1), plan.reason)
+    # 2D: search factorizations of n, preferring the requested C (or a
+    # near-square grid when the plan carries no grid preference)
+    scheme = plan.scheme if plan.scheme in SCHEMES_2D else "equally-sized"
+    want_c = plan.grid[1] if len(plan.grid) == 2 else None
+    cands = sorted((r, n // r) for r in range(1, n + 1) if n % r == 0)
+    if scheme == "equally-sized":
+        fits = [(r, c) for r, c in cands if rows % r == 0 and cols % c == 0]
+    elif scheme == "equally-wide":
+        fits = [(r, c) for r, c in cands if cols % c == 0]
+    else:  # variable-sized: no alignment constraints
+        fits = cands
+    if not fits:
+        # element-granular 1D needs a COO-family format (row-sorted
+        # csr/bcsr only balance at row granularity)
+        return Plan(
+            "1d", "nnz", "coo" if fmt in ("csr", "coo") else "bcoo",
+            "ppermute", (n, 1),
+            plan.reason + " [2d grid unfit for shape; 1d fallback]",
+        )
+    if want_c is None:
+        R, C = min(fits, key=lambda rc: abs(rc[0] - rc[1]))
+    else:
+        R, C = min(fits, key=lambda rc: abs(rc[1] - want_c))
+    if scheme == "equally-sized":
+        # "global" stays honored (the paper's faithful retrieve path);
+        # anything else normalizes to the aligned in-network merges
+        valid = ("psum", "psum_scatter", "global")
+        merge = plan.merge if plan.merge in valid else "psum"
+        if merge == "psum_scatter" and (rows // R) % C != 0:
+            merge = "psum"
+    else:
+        merge = "global"  # unaligned rows can only merge via the paper path
+    return Plan("2d", scheme, fmt, merge, (R, C), plan.reason)
+
+
+def resolve_scheme(
+    stats: MatrixStats,
+    shape: tuple,
+    n_devices: int,
+    scheme="auto",
+    *,
+    hw: Optional[HardwareModel] = None,
+    partitioning: Optional[str] = None,
+    fmt: Optional[str] = None,
+    merge: Optional[str] = None,
+    grid: Optional[tuple] = None,
+    block: Tuple[int, int] = (8, 16),
+    fit: bool = True,
+) -> Plan:
+    """Turn "auto" / a scheme string / an adaptive.Plan into a fitted Plan."""
+    hw = hw if hw is not None else HardwareModel(chips=max(1, n_devices))
+    if isinstance(scheme, Plan):
+        plan = scheme
+    elif scheme == "auto":
+        plan = select_scheme(stats, hw)
+        if partitioning is not None and plan.partitioning != partitioning:
+            if partitioning == "1d":
+                plan = Plan("1d", "nnz", plan.fmt, "ppermute",
+                            (n_devices, 1), "forced 1d")
+            else:
+                plan = Plan("2d", "equally-sized", plan.fmt, "psum_scatter",
+                            plan.grid, "forced 2d")
+    elif isinstance(scheme, str):
+        plan = _plan_from_string(scheme, n_devices, fmt, merge)
+    else:
+        raise TypeError(f"scheme must be 'auto', a string or a Plan; got {scheme!r}")
+    # single-dimension overrides apply to every scheme source (idempotent for
+    # the string branch, which already baked them in)
+    if fmt is not None:
+        plan = replace(plan, fmt=fmt)
+    if merge is not None:
+        plan = replace(plan, merge=merge)
+    if plan.fmt not in FORMATS:
+        raise ValueError(f"unknown format {plan.fmt!r}; one of {FORMATS}")
+    if grid is not None:
+        plan = replace(plan, grid=tuple(grid))
+    if fit:
+        plan = fit_plan(plan, shape, n_devices, block)
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# ExecutionPlan
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ExecutionPlan:
+    """Everything needed to compile one SpMV program, inspectable up front."""
+
+    matrix: object  # repro.api.matrix.SparseMatrix
+    scheme: Plan  # fitted adaptive plan: partitioning/balance/fmt/merge/grid
+    impl: str  # "xla" | "pallas"
+    mesh: object | None  # None => single-device execution
+    dtype: np.dtype
+    block: Tuple[int, int] = (8, 16)
+    interpret: bool = True  # pallas interpret mode (CPU validation)
+    hw: Optional[HardwareModel] = None
+    estimate: dict = field(default_factory=dict)  # analytic Fig.-4 step times
+    part: Optional[PartitionedMatrix] = None  # prebuilt partition (optional)
+    ring: bool = False  # 1D ring schedule (requires bucketed part)
+    ring_counts: Optional[np.ndarray] = None
+
+    # -- inspection --------------------------------------------------------
+
+    @property
+    def partitioning(self) -> str:
+        return self.scheme.partitioning
+
+    @property
+    def fmt(self) -> str:
+        return self.scheme.fmt
+
+    @property
+    def grid(self) -> tuple:
+        return tuple(self.scheme.grid)
+
+    @property
+    def merge(self) -> str:
+        return self.scheme.merge
+
+    @property
+    def is_distributed(self) -> bool:
+        return self.mesh is not None
+
+    @property
+    def scheme_id(self) -> str:
+        """Stable scheme identity (part of the engine's plan-cache key)."""
+        s = self.scheme
+        tag = f"{s.partitioning}.{s.scheme}.{s.fmt}.{s.merge}"
+        return tag + (".ring" if self.ring else "")
+
+    def describe(self) -> str:
+        s = self.scheme
+        where = (f"mesh{tuple(self.mesh.devices.shape)}" if self.is_distributed
+                 else "single-device")
+        lines = [
+            f"ExecutionPlan[{s.partitioning}.{s.scheme} fmt={s.fmt} "
+            f"merge={s.merge} grid={tuple(s.grid)} impl={self.impl} "
+            f"dtype={np.dtype(self.dtype).name} {where}]",
+            f"  reason: {s.reason}",
+        ]
+        if self.estimate:
+            est = ", ".join(f"{k}={v:.2e}" for k, v in self.estimate.items())
+            lines.append(f"  model estimate: {est}")
+        return "\n".join(lines)
+
+    # -- axes / specs ------------------------------------------------------
+
+    @property
+    def axes(self) -> tuple:
+        if not self.is_distributed:
+            return ()
+        names = getattr(self.mesh, "axis_names", None)
+        if names:
+            return tuple(names)
+        return (AXIS_1D,) if self.partitioning == "1d" else AXES_2D
+
+    def _x_spec(self):
+        axes = self.axes
+        return P(axes[0]) if self.partitioning == "1d" else P(axes[1])
+
+    def _x_pad(self, part: PartitionedMatrix) -> int:
+        cols = part.shape[1]
+        if self.partitioning == "1d":
+            parts = part.n_parts
+            return -(-cols // parts) * parts
+        C = part.grid[1]
+        # variable-sized tiles don't align with the uniform x shards, so the
+        # program all-gathers + re-slices internally; pad x so the uniform
+        # placement divides (the aligned schemes require cols % C)
+        return cols if self.scheme.scheme != "variable-sized" else -(-cols // C) * C
+
+    # -- compilation -------------------------------------------------------
+
+    def _partition(self) -> PartitionedMatrix:
+        if self.part is not None:
+            return self.part
+        a = self.matrix.dense()
+        if a.dtype != self.dtype:
+            a = a.astype(self.dtype)
+        if self.partitioning == "1d":
+            return partition_1d(a, self.scheme.grid[0], fmt=self.fmt,
+                                balance=self.scheme.scheme, block=self.block)
+        return partition_2d(a, tuple(self.scheme.grid), fmt=self.fmt,
+                            scheme=self.scheme.scheme, block=self.block)
+
+    def _program(self, part: PartitionedMatrix):
+        axes = self.axes
+        if self.partitioning == "1d":
+            if self.ring:
+                if self.ring_counts is None:
+                    raise ValueError("ring plans need ring_counts "
+                                     "(see distributed.bucket_by_source_shard)")
+                return D.spmv_1d_ring(part, self.ring_counts, self.mesh, axes[0])
+            return D.spmv_1d(part, self.mesh, axes[0])
+        return D.spmv_2d(part, self.mesh, axes, merge=self.merge)
+
+    def program(self, part: Optional[PartitionedMatrix] = None):
+        """Build the shard_map call object (with ``.jitted``) WITHOUT placing
+        the matrix — what the dry-run lowers against abstract avals."""
+        if not self.is_distributed:
+            raise ValueError("single-device plans have no shard_map program; "
+                             "call .compile() instead")
+        return self._program(part if part is not None else self._partition())
+
+    def compile(self) -> Executor:
+        """Partition (if needed), place and trace — returns the Executor."""
+        import time as _time
+
+        if not self.is_distributed:
+            container = self.matrix.container(self.fmt, block=self.block,
+                                              dtype=self.dtype)
+            return SingleDeviceExecutor(self, container, self.impl,
+                                        self.interpret)
+        if self.impl != "xla":
+            raise ValueError(
+                "distributed plans run the XLA shard_map path; the Pallas "
+                "kernels are single-device (impl='pallas' needs mesh=None)"
+            )
+        t0 = _time.perf_counter()
+        part = self._partition()
+        axes = self.axes
+        program = self._program(part)
+        if self.partitioning == "1d":
+            placed = D.place_1d(part, self.mesh, axes[0])
+        else:
+            placed = D.place_2d(part, self.mesh, axes)
+        exe = MeshExecutor(
+            self, part, self.mesh, axes, program,
+            x_spec=self._x_spec(), x_pad=self._x_pad(part), merge=self.merge,
+        ).place_matrix(placed)
+        exe.build_seconds = _time.perf_counter() - t0
+        return exe
+
+
+def plan_from_partitioned(
+    part: PartitionedMatrix,
+    mesh,
+    *,
+    impl: str = "xla",
+    merge: Optional[str] = None,
+    ring: bool = False,
+    ring_counts: Optional[np.ndarray] = None,
+    matrix=None,
+) -> ExecutionPlan:
+    """Wrap an already-partitioned matrix (e.g. synthetic, never dense) in an
+    ExecutionPlan so it flows through the same program-building path."""
+    partitioning = "1d" if part.grid[1] == 1 else "2d"
+    scheme_name = part.scheme.split(".", 1)[-1].replace("+ring", "")
+    if merge is None:
+        if partitioning == "1d":
+            merge = "ppermute"
+        else:
+            merge = "psum" if scheme_name == "equally-sized" else "global"
+    plan = Plan(partitioning, scheme_name, part.fmt, merge,
+                tuple(part.grid), "prebuilt partition")
+    return ExecutionPlan(
+        matrix=matrix, scheme=plan, impl=impl, mesh=mesh,
+        dtype=np.dtype(part.dtype), block=part.block, part=part,
+        ring=ring, ring_counts=ring_counts,
+    )

@@ -1,10 +1,15 @@
-"""Single-device SpMV dispatch (container-level public API).
+"""Single-device SpMV dispatch (deprecated facade — use ``repro.api``).
 
-Thin facade over kernels/ops.py so `repro.core` is self-contained for users:
+Kept as a compatibility shim: ``repro.core.spmv.spmv`` keeps resolving to the
+internal backend in kernels/ops.py with identical semantics.  New code
+should go through the one planner→executor pipeline instead:
 
-    from repro.core import spmv
-    y = spmv.spmv(matrix, x)                 # XLA path, any backend
-    y = spmv.spmv(matrix, x, impl="pallas")  # TPU kernels (interpret on CPU)
+    from repro.api import SparseMatrix
+    exe = SparseMatrix.from_dense(a).plan(fmt="coo", impl="pallas").compile()
+    y = exe(x)              # same kernels, plus stats/plan introspection
+
+Deprecation policy (see CHANGES.md): the old entry points stay importable
+and behaviour-stable for at least two further PRs; only the docs moved.
 """
 from repro.kernels.ops import spmv  # noqa: F401
 

@@ -2,16 +2,17 @@
 
 The paper's preprocessing costs (format conversion, partitioning, transfer to
 the PIM banks) only pay off when amortized over many multiplications of the
-same matrix.  This package is that amortization layer for the TPU port:
+same matrix.  This package is that amortization layer, built on the
+``repro.api`` pipeline (``SparseMatrix -> ExecutionPlan -> Executor``):
 
-  * :mod:`registry`   — named matrices, fingerprinted via core/stats
-  * :mod:`plan_cache` — LRU cache of partitioned + device-placed + compiled
-                        SpMV programs keyed on (fingerprint, mesh, dtype,
-                        scheme)
+  * :mod:`registry`   — named matrices, fingerprinted via repro.api
+  * :mod:`plan_cache` — LRU cache of compiled api Executors keyed on
+                        (fingerprint, mesh, dtype, scheme); eviction
+                        explicitly deletes the device-placed arrays
   * :mod:`engine`     — SpmvEngine: register once, multiply many times with
                         zero re-partitioning / re-tracing
-  * :mod:`batcher`    — micro-batching of concurrent multiply requests into
-                        SpMM (multi-RHS) calls
+  * :mod:`batcher`    — deadline-aware micro-batching of concurrent multiply
+                        requests into SpMM (multi-RHS) calls
   * :mod:`telemetry`  — per-request load / kernel / retrieve time splits
                         (paper Fig. 17 breakdown)
 """

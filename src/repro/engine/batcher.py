@@ -6,10 +6,15 @@ sides into one (cols, B) SpMM reuses that traffic across the batch — the
 TPU analogue of the paper's point that PIM SpMV wins only when data movement
 is amortized.  The batcher therefore:
 
-  * queues ``submit(name, x)`` requests per matrix,
+  * queues ``submit(name, x)`` requests per matrix, each carrying a flush
+    *deadline* (``deadline_s`` from submission, default ``max_delay_s``),
   * flushes a matrix's queue as one ``engine.multiply(name, X)`` with X
     stacked column-wise, when the queue reaches ``max_batch``, on explicit
-    ``flush()``, or periodically from the optional background thread,
+    ``flush()``, or — in background mode — exactly when the oldest pending
+    request's deadline would otherwise be missed (the flush thread sleeps
+    until the earliest deadline, not on a fixed polling interval, so an
+    urgent request is never stuck behind a timer and an idle batcher burns
+    no wakeups),
   * pads the batch up to the next size in ``buckets`` so the jitted program
     sees a bounded set of batch shapes (one retrace per bucket, ever).
 
@@ -19,13 +24,22 @@ block, poll or chain.
 from __future__ import annotations
 
 import threading
+import time
 from collections import defaultdict
 from concurrent.futures import Future
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
 __all__ = ["MicroBatcher"]
+
+
+@dataclass
+class _Pending:
+    x: np.ndarray
+    future: Future
+    deadline: float  # monotonic time by which this request must flush
 
 
 class MicroBatcher:
@@ -35,6 +49,7 @@ class MicroBatcher:
         max_batch: int = 8,
         buckets: Sequence[int] = (1, 2, 4, 8),
         auto_flush: bool = True,
+        max_delay_s: float = 0.002,
     ) -> None:
         if max_batch > max(buckets):
             raise ValueError("max_batch must be <= the largest bucket")
@@ -42,17 +57,25 @@ class MicroBatcher:
         self.max_batch = max_batch
         self.buckets = tuple(sorted(buckets))
         self.auto_flush = auto_flush
+        self.max_delay_s = max_delay_s
         self._lock = threading.Lock()
-        self._queues: Dict[str, List[Tuple[np.ndarray, Future]]] = defaultdict(list)
+        self._cv = threading.Condition(self._lock)
+        self._queues: Dict[str, List[_Pending]] = defaultdict(list)
         self._thread: Optional[threading.Thread] = None
-        self._stop = threading.Event()
+        self._stop = False
         self.batches_run = 0
         self.vectors_run = 0
+        self.deadline_flushes = 0  # background flushes triggered by a deadline
 
     # ------------------------------------------------------------- requests
 
-    def submit(self, name: str, x) -> Future:
-        """Enqueue one SpMV; returns a Future resolving to y (rows,)."""
+    def submit(self, name: str, x, deadline_s: Optional[float] = None) -> Future:
+        """Enqueue one SpMV; returns a Future resolving to y (rows,).
+
+        ``deadline_s`` is this request's latency budget: in background mode
+        its queue is flushed no later than ``deadline_s`` after submission
+        (default ``max_delay_s``).
+        """
         entry = self.engine.registry.get(name)  # fail fast on unknown names
         x = np.asarray(x)
         if x.ndim != 1:
@@ -63,10 +86,15 @@ class MicroBatcher:
                 f"x has {x.shape[0]} rows, matrix {name!r} has "
                 f"{entry.shape[1]} cols"
             )
+        budget = self.max_delay_s if deadline_s is None else deadline_s
         fut: Future = Future()
-        with self._lock:
-            self._queues[name].append((x, fut))
+        with self._cv:
+            self._queues[name].append(
+                _Pending(x, fut, time.monotonic() + budget)
+            )
             full = len(self._queues[name]) >= self.max_batch
+            # wake the flush thread: the earliest deadline may have moved up
+            self._cv.notify_all()
         if full and self.auto_flush:
             self.flush(name)
         return fut
@@ -90,6 +118,9 @@ class MicroBatcher:
         with self._lock:
             names = [name] if name is not None else list(self._queues)
             taken = {n: self._queues.pop(n, []) for n in names}
+        return self._run_taken(taken)
+
+    def _run_taken(self, taken: Dict[str, List[_Pending]]) -> int:
         served = 0
         for n, reqs in taken.items():
             while reqs:
@@ -98,46 +129,77 @@ class MicroBatcher:
                 served += len(chunk)
         return served
 
-    def _run_batch(self, name: str, reqs: List[Tuple[np.ndarray, Future]]) -> None:
+    def _run_batch(self, name: str, reqs: List[_Pending]) -> None:
         # claim the futures up front; drop waiters that cancelled meanwhile
-        live = [(x, f) for x, f in reqs if f.set_running_or_notify_cancel()]
+        live = [p for p in reqs if p.future.set_running_or_notify_cancel()]
         if not live:
             return
         try:
-            xs = [x for x, _ in live]
+            xs = [p.x for p in live]
             b = len(xs)
             padded = self._bucket(b)
             X = np.stack(xs + [np.zeros_like(xs[0])] * (padded - b), axis=1)
             Y = self.engine.multiply(name, X)
         except Exception as exc:  # deliver the failure to every waiter
-            for _, fut in live:
-                fut.set_exception(exc)
+            for p in live:
+                p.future.set_exception(exc)
             return
         self.batches_run += 1
         self.vectors_run += b
-        for j, (_, fut) in enumerate(live):
-            fut.set_result(np.asarray(Y[:, j]))
+        for j, p in enumerate(live):
+            p.future.set_result(np.asarray(Y[:, j]))
 
     # ------------------------------------------------------- background mode
 
-    def start(self, interval_s: float = 0.002) -> None:
-        """Flush pending queues every ``interval_s`` from a daemon thread."""
+    def _earliest_deadline_locked(self) -> Optional[float]:
+        deadlines = [p.deadline for q in self._queues.values() for p in q]
+        return min(deadlines) if deadlines else None
+
+    def _take_due_locked(self, now: float) -> Dict[str, List[_Pending]]:
+        """Pop every queue holding a request whose deadline has arrived.
+
+        Deadlines are usually monotone per queue (submission order + equal
+        budgets) but a later urgent request pulls the whole queue forward —
+        it rides in the same coalesced SpMM.
+        """
+        due = [n for n, q in self._queues.items()
+               if q and min(p.deadline for p in q) <= now]
+        return {n: self._queues.pop(n) for n in due}
+
+    def _loop(self) -> None:
+        while True:
+            with self._cv:
+                if self._stop:
+                    return
+                now = time.monotonic()
+                nxt = self._earliest_deadline_locked()
+                if nxt is None:
+                    self._cv.wait()  # idle: no wakeups until a submit
+                    continue
+                if nxt > now:
+                    self._cv.wait(timeout=nxt - now)
+                    continue
+                taken = self._take_due_locked(now)
+            if taken:
+                self.deadline_flushes += 1
+                self._run_taken(taken)
+
+    def start(self) -> None:
+        """Serve deadlines from a daemon thread: each queue is flushed when
+        its oldest pending request's deadline would otherwise be missed."""
         if self._thread is not None:
             return
-        self._stop.clear()
-
-        def loop():
-            while not self._stop.wait(interval_s):
-                self.flush()
-
-        self._thread = threading.Thread(target=loop, daemon=True,
+        self._stop = False
+        self._thread = threading.Thread(target=self._loop, daemon=True,
                                         name="spmv-microbatcher")
         self._thread.start()
 
     def stop(self, drain: bool = True) -> None:
         if self._thread is None:
             return
-        self._stop.set()
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
         self._thread.join()
         self._thread = None
         if drain:

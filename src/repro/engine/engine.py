@@ -1,34 +1,31 @@
 """SpmvEngine — register once, multiply many times.
 
-The serving counterpart of the one-shot pipeline in examples/spmv_end_to_end:
-``register(name, a)`` runs the whole preprocessing chain a single time
-(stats -> adaptive plan -> partition -> device placement -> traced + jitted
-shard_map program) and parks the result in a :class:`PlanCache`;
-``multiply(name, x)`` afterwards only places x, runs the cached executable
-and assembles the rows — zero re-partitioning, zero re-tracing (per input
-shape), which is what makes repeated SpMV pay off (paper §3.1, Gómez-Luna et
-al. §5 on amortizing DPU transfer cost).
+The serving layer on top of the ``repro.api`` pipeline: ``register(name, a)``
+runs ``SparseMatrix -> ExecutionPlan -> Executor`` a single time (stats ->
+adaptive plan fitted to the device pool -> partition -> device placement ->
+traced + jitted shard_map program) and parks the compiled executor in a
+:class:`PlanCache`; ``multiply(name, x)`` afterwards only places x, runs the
+cached executable and assembles the rows — zero re-partitioning, zero
+re-tracing (per input shape), which is what makes repeated SpMV pay off
+(paper §3.1, Gómez-Luna et al. §5 on amortizing DPU transfer cost).
 
 The engine adapts the paper plan to the actual device pool: the adaptive
 selector is asked for a scheme as if every local device were a PIM core, and
 the resulting grid is fitted to the divisibility constraints of the 2D
-schemes (falling back to 1D element-balanced COO, which always fits).
+schemes (falling back to 1D element-balanced COO, which always fits) — the
+same ``repro.api.fit_plan`` rules every other entry point uses.
 """
 from __future__ import annotations
 
 import time
 from typing import Optional, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import compat
-from repro.compat import NamedSharding, P
-from repro.core import distributed as D
-from repro.core.adaptive import HardwareModel, Plan, select_scheme
-from repro.core.partition import SCHEMES_2D, partition_1d, partition_2d
-from repro.core.stats import compute_stats
+from repro.api import AXES_2D, AXIS_1D, SparseMatrix, resolve_scheme
+from repro.api.plan import fit_plan
+from repro.core.adaptive import HardwareModel, Plan
 from repro.engine.plan_cache import CompiledPlan, PlanCache, PlanKey
 from repro.engine.registry import (
     MatrixRegistry,
@@ -39,8 +36,8 @@ from repro.engine.telemetry import RequestRecord, Telemetry
 
 __all__ = ["SpmvEngine"]
 
-_AXIS_1D = "parts"
-_AXES_2D = ("rows", "cols")
+_AXIS_1D = AXIS_1D
+_AXES_2D = AXES_2D
 
 
 class SpmvEngine:
@@ -54,6 +51,8 @@ class SpmvEngine:
         block: Tuple[int, int] = (8, 16),
         hw: Optional[HardwareModel] = None,
     ) -> None:
+        import jax
+
         self.devices = list(devices) if devices is not None else jax.devices()
         self.cache = PlanCache(cache_capacity)
         self.registry = MatrixRegistry()
@@ -81,107 +80,35 @@ class SpmvEngine:
     # ------------------------------------------------------------ plan fitting
 
     def _fit_plan(self, plan: Plan, shape: tuple, dtype) -> Plan:
-        """Adapt the paper plan to the device pool + SPMD divisibility rules.
-
-        2D equally-sized requires rows % R == 0 and cols % C == 0 (and
-        psum_scatter additionally (rows/R) % C == 0, else downgrade to psum);
-        when no factorization of the device count fits, fall back to the 1D
-        element-balanced plan, which has no divisibility constraints.
-        """
-        n = self.n_devices
-        rows, cols = shape
-        fmt = plan.fmt
-        if fmt in ("bcoo", "bcsr") and not (
-            rows % self.block[0] == 0 and cols % self.block[1] == 0
-        ):
-            fmt = "coo"  # block tiling must cover the matrix exactly
-        if plan.partitioning == "1d":
-            balance = plan.scheme if plan.scheme in ("rows", "nnz-rgrn", "nnz") else "nnz"
-            if fmt in ("csr", "bcsr") and balance == "nnz":
-                balance = "nnz-rgrn"
-            return Plan("1d", balance, fmt, "ppermute", (n, 1), plan.reason)
-        # 2D: search factorizations of n, preferring the selector's C
-        scheme = plan.scheme if plan.scheme in SCHEMES_2D else "equally-sized"
-        want_c = plan.grid[1] if len(plan.grid) == 2 else 1
-        cands = sorted((r, n // r) for r in range(1, n + 1) if n % r == 0)
-        if scheme == "equally-sized":
-            fits = [(r, c) for r, c in cands if rows % r == 0 and cols % c == 0]
-        elif scheme == "equally-wide":
-            fits = [(r, c) for r, c in cands if cols % c == 0]
-        else:  # variable-sized: no alignment constraints
-            fits = cands
-        if not fits:
-            # element-granular 1D needs a COO-family format (row-sorted
-            # csr/bcsr only balance at row granularity)
-            return Plan(
-                "1d", "nnz", "coo" if fmt in ("csr", "coo") else "bcoo",
-                "ppermute", (n, 1),
-                plan.reason + " [2d grid unfit for shape; 1d fallback]",
-            )
-        R, C = min(fits, key=lambda rc: abs(rc[1] - want_c))
-        if scheme == "equally-sized":
-            merge = plan.merge if plan.merge in ("psum", "psum_scatter") else "psum"
-            if merge == "psum_scatter" and (rows // R) % C != 0:
-                merge = "psum"
-        else:
-            merge = "global"  # unaligned rows can only merge via the paper path
-        return Plan("2d", scheme, fmt, merge, (R, C), plan.reason)
+        """Adapt the paper plan to the device pool (api.fit_plan rules)."""
+        return fit_plan(plan, shape, self.n_devices, self.block)
 
     # -------------------------------------------------------------- building
 
-    def _build(self, a: np.ndarray, plan: Plan, key: PlanKey) -> CompiledPlan:
+    def _build(self, sm: SparseMatrix, plan: Plan, key: PlanKey) -> CompiledPlan:
         t0 = time.perf_counter()
         self.partition_count += 1
-        rows, cols = a.shape
         if plan.partitioning == "1d":
-            parts = plan.grid[0]
-            part = partition_1d(
-                a, parts, fmt=plan.fmt, balance=plan.scheme, block=self.block
-            )
-            mesh = self._mesh((parts,), (_AXIS_1D,))
-            arrays = D.place_1d(part, mesh, _AXIS_1D)
-            inner = D.spmv_1d(part, mesh, _AXIS_1D)
-            axes = (_AXIS_1D,)
-            x_spec = P(_AXIS_1D)
-            x_pad = -(-cols // parts) * parts
+            mesh = self._mesh((plan.grid[0],), (_AXIS_1D,))
         else:
-            part = partition_2d(a, plan.grid, fmt=plan.fmt, scheme=plan.scheme,
-                                block=self.block)
-            mesh = self._mesh(plan.grid, _AXES_2D)
-            arrays = D.place_2d(part, mesh, _AXES_2D)
-            inner = D.spmv_2d(part, mesh, _AXES_2D, merge=plan.merge)
-            axes = _AXES_2D
-            x_spec = P(_AXES_2D[1])
-            # variable-sized tiles don't align with the uniform x shards, so
-            # the program all-gathers + re-slices internally; pad x so the
-            # uniform placement divides (the aligned schemes require cols % C)
-            C = plan.grid[1]
-            x_pad = cols if plan.scheme != "variable-sized" else -(-cols // C) * C
-        inner_jit = inner.jitted
-        trace_box = {"count": 0}
-
-        @jax.jit
-        def run(arrs, xs):
-            trace_box["count"] += 1  # python side effect: fires per (re)trace
-            return inner_jit(arrs, xs)
-
+            mesh = self._mesh(tuple(plan.grid), _AXES_2D)
+        exe = sm.plan(
+            scheme=plan, mesh=mesh, impl="xla", block=self.block, hw=self.hw
+        ).compile()
         return CompiledPlan(
             key=key,
             plan=plan,
-            part=part,
-            arrays=arrays,
-            run=run,
-            mesh=mesh,
-            axes=axes,
-            x_spec=x_spec,
-            x_pad=x_pad,
-            trace_count_fn=lambda: trace_box["count"],
+            part=exe.part,
+            arrays=exe.arrays,
+            run=exe.run,
+            mesh=exe.mesh,
+            axes=tuple(exe.axes),
+            x_spec=exe.x_spec,
+            x_pad=exe.x_pad,
+            trace_count_fn=exe.trace_count_fn,
             build_seconds=time.perf_counter() - t0,
-            assemble_meta=dict(
-                row_start=np.asarray(part.row_start),
-                row_extent=np.asarray(part.row_extent),
-                rows=part.shape[0],
-            ),
+            assemble_meta=exe.assemble_meta,
+            executor=exe,
         )
 
     # ------------------------------------------------------------ public API
@@ -208,30 +135,25 @@ class SpmvEngine:
             a = a.astype(dtype)
         if a.ndim != 2:
             raise ValueError(f"expected a 2D matrix, got shape {a.shape}")
-        stats = compute_stats(a, block=self.block)
-        if plan is None:
-            plan = select_scheme(stats, self.hw)
-            if partitioning is not None and plan.partitioning != partitioning:
-                if partitioning == "1d":
-                    plan = Plan("1d", "nnz", plan.fmt, "ppermute",
-                                (self.n_devices, 1), "forced 1d")
-                else:
-                    plan = Plan("2d", "equally-sized", plan.fmt, "psum_scatter",
-                                plan.grid, "forced 2d")
-        plan = self._fit_plan(plan, a.shape, a.dtype)
-        fp = fingerprint_matrix(a)
+        sm = SparseMatrix.from_dense(a, stats_block=self.block)
+        plan = resolve_scheme(
+            sm.stats, a.shape, self.n_devices,
+            plan if plan is not None else "auto",
+            hw=self.hw, partitioning=partitioning, block=self.block,
+        )
+        fp = sm.fingerprint()
         scheme_id = f"{plan.partitioning}.{plan.scheme}.{plan.fmt}.{plan.merge}"
         key: PlanKey = (fp, tuple(plan.grid), np.dtype(a.dtype).str, scheme_id)
         compiled = self.cache.get(key)
         if compiled is None:
-            compiled = self._build(a, plan, key)
+            compiled = self._build(sm, plan, key)
             self.cache.put(compiled)
         entry = RegisteredMatrix(
             name=name,
             fingerprint=fp,
             shape=a.shape,
             dtype=np.dtype(a.dtype).str,
-            stats=stats,
+            stats=sm.stats,
             plan=compiled.plan,
             cache_key=key,
         )
@@ -243,14 +165,8 @@ class SpmvEngine:
         ):
             self.cache.evict(old.cache_key)
         if warmup:
-            self._warm(compiled)
+            compiled.executor.warmup()
         return entry
-
-    def _warm(self, cp: CompiledPlan) -> None:
-        """Trace + compile the vector-shaped program now, off the request path."""
-        x = np.zeros(cp.x_pad, cp.part.dtype)
-        xs = jax.device_put(jnp.asarray(x), NamedSharding(cp.mesh, cp.x_spec))
-        jax.block_until_ready(cp.run(cp.arrays, xs))
 
     def _compiled(self, entry: RegisteredMatrix) -> CompiledPlan:
         compiled = self.cache.get(entry.cache_key)
@@ -265,28 +181,17 @@ class SpmvEngine:
         """y = A @ x for registered ``name``; x is (cols,) or (cols, B)."""
         entry = self.registry.get(name)
         cp = self._compiled(entry)
-        rows, cols = entry.shape
+        exe = cp.executor
         x = np.asarray(x)
-        if not np.can_cast(x.dtype, cp.part.dtype, casting="same_kind"):
-            raise TypeError(
-                f"x dtype {x.dtype} cannot safely cast to matrix dtype "
-                f"{np.dtype(cp.part.dtype)}"
-            )
-        x = x.astype(cp.part.dtype, copy=False)
-        if x.shape[0] != cols:
-            raise ValueError(f"x has {x.shape[0]} rows, matrix has {cols} cols")
         batch = x.shape[1] if x.ndim == 2 else 1
 
         traces_before = cp.trace_count
         t0 = time.perf_counter()
-        if cp.x_pad != x.shape[0]:
-            x = np.pad(x, ((0, cp.x_pad - x.shape[0]),) + ((0, 0),) * (x.ndim - 1))
-        xs = jax.device_put(jnp.asarray(x), NamedSharding(cp.mesh, cp.x_spec))
-        xs = jax.block_until_ready(xs)
+        xs = exe.place(x)  # load: validate dtype/shape, pad, put on mesh
         t1 = time.perf_counter()
-        raw = jax.block_until_ready(cp.run(cp.arrays, xs))
+        raw = exe.run_raw(xs)  # kernel: the cached jitted shard_map program
         t2 = time.perf_counter()
-        y = self._assemble(cp, raw)
+        y = exe.assemble(raw)  # retrieve: fetch + assemble global rows
         t3 = time.perf_counter()
 
         entry.requests += batch
@@ -302,19 +207,6 @@ class SpmvEngine:
             traced=cp.trace_count > traces_before,
         ))
         return y
-
-    def _assemble(self, cp: CompiledPlan, raw) -> np.ndarray:
-        meta = cp.assemble_meta
-        if cp.plan.partitioning == "1d":
-            out = D.SpmvOutput(raw, merge="none", **meta)
-        elif cp.plan.merge == "global":
-            out = D.SpmvOutput(
-                raw, merge="global",
-                replicated_global=raw[0, 0][: meta["rows"]], **meta
-            )
-        else:
-            out = D.SpmvOutput(raw, merge=cp.plan.merge, **meta)
-        return D.assemble_rows(out)
 
     # -------------------------------------------------------- introspection
 

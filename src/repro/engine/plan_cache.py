@@ -11,7 +11,9 @@ so the same matrix served on a different mesh, in a different precision, or
 under a forced scheme compiles its own entry, while a re-registered identical
 matrix reuses the existing one (hit).  Eviction is LRU at a fixed capacity —
 placed matrices pin device memory, so the cache bound is the engine's memory
-bound.
+bound; evicted entries have their device-placed arrays explicitly deleted
+(``CompiledPlan.release``) rather than waiting for GC, so the HBM the bound
+promises is actually returned at eviction time.
 """
 from __future__ import annotations
 
@@ -45,10 +47,37 @@ class CompiledPlan:
     build_seconds: float = 0.0  # partition + place + first-trace wall time
     assemble_meta: Optional[dict] = None  # host row_start/row_extent/rows
     requests_served: int = 0  # multiply() calls answered by this executable
+    executor: Optional[object] = None  # repro.api MeshExecutor backing `run`
 
     @property
     def trace_count(self) -> int:
         return self.trace_count_fn()
+
+    def release(self) -> None:
+        """Explicitly delete the device-placed matrix arrays (idempotent).
+
+        Called by the cache on eviction: placed arrays pin device memory and
+        plans can stay reachable from host references (registry entries,
+        telemetry closures), so relying on GC would defer the free
+        indefinitely.  A request racing an eviction on another thread fails
+        with a deleted-array error — the same "plan was evicted, re-register"
+        contract the cache-miss path already enforces.
+        """
+        arrays, self.arrays = self.arrays, None
+        if self.executor is not None:
+            self.executor.release()  # owns (and deletes) the same pytree
+            return
+        if arrays is None:
+            return
+        import jax
+
+        for leaf in jax.tree_util.tree_leaves(arrays):
+            delete = getattr(leaf, "delete", None)
+            if delete is not None:
+                try:
+                    delete()
+                except Exception:
+                    pass
 
 
 @dataclass
@@ -91,12 +120,13 @@ class PlanCache:
         return self._entries.get(key)
 
     def put(self, entry: CompiledPlan) -> Optional[CompiledPlan]:
-        """Insert; returns the evicted entry when capacity overflows."""
+        """Insert; returns the (released) evicted entry on capacity overflow."""
         self._entries[entry.key] = entry
         self._entries.move_to_end(entry.key)
         if len(self._entries) > self.capacity:
             _, evicted = self._entries.popitem(last=False)
             self._evictions += 1
+            evicted.release()
             return evicted
         return None
 
@@ -104,9 +134,12 @@ class PlanCache:
         entry = self._entries.pop(key, None)
         if entry is not None:
             self._evictions += 1
+            entry.release()
         return entry
 
     def clear(self) -> None:
+        for entry in self._entries.values():
+            entry.release()
         self._entries.clear()
 
     def __contains__(self, key: PlanKey) -> bool:

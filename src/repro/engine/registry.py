@@ -9,28 +9,14 @@ edit — even one value — is a miss.
 """
 from __future__ import annotations
 
-import hashlib
 from dataclasses import dataclass
 from typing import Dict, Iterator, Optional
 
-import numpy as np
-
+from repro.api.matrix import fingerprint_matrix  # canonical implementation
 from repro.core.adaptive import Plan
 from repro.core.stats import MatrixStats
 
 __all__ = ["fingerprint_matrix", "RegisteredMatrix", "MatrixRegistry"]
-
-
-def fingerprint_matrix(a: np.ndarray) -> str:
-    """Stable content hash of a dense matrix's sparsity structure + values."""
-    a = np.ascontiguousarray(a)
-    h = hashlib.sha256()
-    h.update(repr((a.shape, a.dtype.str)).encode())
-    ri, ci = np.nonzero(a)
-    h.update(ri.astype(np.int64).tobytes())
-    h.update(ci.astype(np.int64).tobytes())
-    h.update(np.ascontiguousarray(a[ri, ci]).tobytes())
-    return h.hexdigest()[:16]
 
 
 @dataclass

@@ -27,6 +27,24 @@ from .ell_spmv import ell_spmv_pallas
 __all__ = ["spmv", "spmm", "spmv_local_coo", "spmv_local_block"]
 
 
+def _require_concrete(m) -> None:
+    """Fail fast when a traced container reaches the Pallas path.
+
+    The (static) chunk plan is built host-side from concrete index arrays;
+    a traced container would otherwise fail deep inside chunk planning with
+    an opaque numpy-on-Tracer error.
+    """
+    if any(isinstance(leaf, jax.core.Tracer)
+           for leaf in jax.tree_util.tree_leaves(m)):
+        raise ValueError(
+            "spmv(impl='pallas') requires concrete (non-traced) matrix "
+            "arrays: the chunk plan is built host-side from the index "
+            "arrays (matrices are preprocessing artifacts, paper §3.1). "
+            "Build the plan outside jit/vmap/grad, or use impl='xla' "
+            "inside traced code."
+        )
+
+
 def spmv(m, x: jax.Array, impl: str = "xla", interpret: bool = True) -> jax.Array:
     """y = m @ x for any SparseP container format (single device).
 
@@ -50,6 +68,7 @@ def spmv(m, x: jax.Array, impl: str = "xla", interpret: bool = True) -> jax.Arra
     if impl == "pallas":
         import numpy as np
 
+        _require_concrete(m)
         if isinstance(m, F.CSR):
             plan = csr_plan_chunks(
                 np.asarray(m.rowptr), np.asarray(m.colind), np.asarray(m.values),

@@ -17,10 +17,10 @@ import json
 import numpy as np
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
 from repro.analysis import roofline as R
+from repro.api import plan_from_partitioned
 from repro.core import distributed as D
 from repro.core.partition import PartitionedMatrix
 from repro.launch.mesh import make_production_mesh
@@ -60,15 +60,16 @@ def synth_partition_1d(rows, cols, nnz_per_row, parts, seed=0):
     )
 
 
-def lower_1d(mat, mesh, axis="data", ring=False):
+def lower_1d(mat, mesh, ring=False):
     if ring:
         # ring plan offsets are host-side preprocessing in production; for
         # the dry-run every bucket is equal-sized by construction
         counts = np.full((mat.n_parts, mat.n_parts),
                          int(mat.nnz[0]) // mat.n_parts, np.int32)
-        fn = D.spmv_1d_ring(mat, counts, mesh, axis)
+        plan = plan_from_partitioned(mat, mesh, ring=True, ring_counts=counts)
     else:
-        fn = D.spmv_1d(mat, mesh, axis)
+        plan = plan_from_partitioned(mat, mesh)
+    fn = plan.program(mat)  # shard_map call object; lowered against avals
     arrs_aval = jax.tree.map(
         lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), D._arrays(mat)
     )
@@ -94,7 +95,7 @@ def main(argv=None):
         mat = synth_partition_1d(args.rows, args.rows, args.nnz_per_row, devs)
         for ring in (False, True):
             label = f"spmv.1d{'.ring' if ring else ''}.{'multipod512' if multi_pod else 'pod256'}"
-            lowered, compiled = lower_1d(mat, flat, "data", ring=ring)
+            lowered, compiled = lower_1d(mat, flat, ring=ring)
             mem = compiled.memory_analysis()
             ca = compat.cost_analysis(compiled)
             coll = R.collective_bytes(compiled.as_text())

@@ -1,0 +1,56 @@
+"""Subprocess body for multi-device api-pipeline parity tests (4 forced fake
+devices must be set before jax initializes).  Invoked by tests/test_api.py;
+prints sentinel lines the test asserts on.
+
+Covers the acceptance grid: SparseMatrix -> ExecutionPlan -> Executor
+round-trips for all four container formats x both partitionings x
+{float32, bfloat16} on the 4-device mesh, plus executor batch parity.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.api import SparseMatrix
+from repro.data.matrices import block_matrix
+
+TOL = {"float32": dict(rtol=1e-3, atol=1e-4),
+       "bfloat16": dict(rtol=5e-2, atol=5e-2)}
+
+
+def main():
+    print(f"DEVICES {jax.device_count()}")
+    if jax.device_count() < 4:
+        print("API SKIP")
+        return
+    rng = np.random.default_rng(0)
+    # block-structured so bcsr/bcoo keep their block tiling through fit_plan;
+    # 96x128 divides the (8,16) test block and every 4-device 2D grid.
+    a32 = block_matrix(96, 128, block=(8, 16), block_density=0.3, seed=3)
+    for dtype in ("float32", "bfloat16"):
+        a = a32.astype(np.dtype(jnp.bfloat16)) if dtype == "bfloat16" else a32
+        af = np.asarray(a, np.float32)
+        x = rng.standard_normal(a.shape[1]).astype(a.dtype)
+        X = rng.standard_normal((a.shape[1], 3)).astype(a.dtype)
+        y_ref = af @ np.asarray(x, np.float32)
+        Y_ref = af @ np.asarray(X, np.float32)
+        sm = SparseMatrix.from_dense(a)
+        for fmt in ("coo", "csr", "bcoo", "bcsr"):
+            for part in ("1d", "2d"):
+                pln = sm.plan(scheme=part, fmt=fmt, devices=jax.devices())
+                assert pln.partitioning == part, pln.describe()
+                exe = pln.compile()
+                y = np.asarray(exe(x), np.float32)
+                Y = np.asarray(exe.batch(X), np.float32)
+                ok = (np.allclose(y, y_ref, **TOL[dtype])
+                      and np.allclose(Y, Y_ref, **TOL[dtype]))
+                print(f"API parity {fmt}.{part}.{dtype}: "
+                      f"{'OK' if ok else 'FAIL'}")
+    print("API DONE")
+
+
+if __name__ == "__main__":
+    main()

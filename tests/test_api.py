@@ -1,0 +1,228 @@
+"""repro.api — the SparseMatrix -> ExecutionPlan -> Executor pipeline.
+
+Single-device parity (all formats x impls x dtypes), constructor
+equivalence, plan inspection/fitting, error boundaries and the deprecation
+shims run inline; the distributed parity grid (formats x partitionings x
+dtypes on a 4-device mesh) runs in a hermetic subprocess with forced fake
+devices (same pattern as tests/test_distributed.py) and skips cleanly when
+the forcing doesn't take.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.api import ExecutionPlan, SparseMatrix, fit_plan, resolve_scheme
+from repro.core import formats as F
+from repro.core.adaptive import Plan
+from repro.data.matrices import block_matrix, regular_matrix, scale_free_matrix
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+TOL = {"float32": dict(rtol=1e-3, atol=1e-4),
+       "bfloat16": dict(rtol=5e-2, atol=5e-2)}
+
+
+def _mat(dtype):
+    a = block_matrix(96, 128, block=(8, 16), block_density=0.3, seed=3)
+    return a.astype(np.dtype(jnp.bfloat16)) if dtype == "bfloat16" else a
+
+
+# ------------------------------------------------- single-device parity
+
+
+@pytest.mark.parametrize("fmt", ["coo", "csr", "bcoo", "bcsr"])
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_executor_parity_single_device(fmt, impl, dtype):
+    a = _mat(dtype)
+    af = np.asarray(a, np.float32)
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal(a.shape[1]).astype(a.dtype)
+    X = rng.standard_normal((a.shape[1], 3)).astype(a.dtype)
+    exe = SparseMatrix.from_dense(a).plan(fmt=fmt, impl=impl).compile()
+    y = np.asarray(exe(x), np.float32)
+    np.testing.assert_allclose(y, af @ np.asarray(x, np.float32), **TOL[dtype])
+    Y = np.asarray(exe.batch(X), np.float32)
+    np.testing.assert_allclose(Y, af @ np.asarray(X, np.float32), **TOL[dtype])
+
+
+# ------------------------------------------------- constructors
+
+
+def test_constructors_agree_on_fingerprint_and_result():
+    a = _mat("float32")
+    x = np.random.default_rng(1).standard_normal(a.shape[1]).astype(np.float32)
+    ri, ci = np.nonzero(a)
+    sms = {
+        "dense": SparseMatrix.from_dense(a),
+        "parts": SparseMatrix.from_parts(ri, ci, a[ri, ci], a.shape),
+        "format": SparseMatrix.from_format(F.dense_to_coo(a)),
+    }
+    fps = {k: sm.fingerprint() for k, sm in sms.items()}
+    assert len(set(fps.values())) == 1, fps
+    for k, sm in sms.items():
+        np.testing.assert_allclose(
+            sm.plan().compile()(x), a @ x, rtol=1e-4, atol=1e-5
+        )
+        assert sm.stats.nnz == len(ri)
+
+
+def test_from_scipy_protocol():
+    scipy_sparse = pytest.importorskip("scipy.sparse")
+    a = regular_matrix(64, 80, 4, seed=5)
+    sm = SparseMatrix.from_scipy(scipy_sparse.csr_matrix(a))
+    x = np.random.default_rng(2).standard_normal(80).astype(np.float32)
+    np.testing.assert_allclose(
+        sm.plan().compile()(x), a @ x, rtol=1e-4, atol=1e-5
+    )
+    with pytest.raises(TypeError, match="tocoo"):
+        SparseMatrix.from_scipy(a)
+
+
+def test_from_parts_validates_indices():
+    with pytest.raises(ValueError, match="out of range"):
+        SparseMatrix.from_parts([0, 9], [0, 1], [1.0, 2.0], (4, 4))
+
+
+# ------------------------------------------------- planning
+
+
+def test_auto_plan_tracks_matrix_class():
+    sf = SparseMatrix.from_dense(scale_free_matrix(256, 256, 6000, seed=2))
+    reg = SparseMatrix.from_dense(regular_matrix(96, 128, 5, seed=1))
+    assert sf.plan(scheme="auto").partitioning == "1d"
+    assert reg.plan(scheme="auto").partitioning == "2d"
+
+
+def test_plan_is_inspectable():
+    sm = SparseMatrix.from_dense(_mat("float32"))
+    pln = sm.plan(scheme="2d.equally-sized")
+    assert isinstance(pln, ExecutionPlan)
+    assert pln.scheme_id == "2d.equally-sized.coo.psum_scatter"
+    assert pln.grid == (1, 1)  # single device
+    assert not pln.is_distributed
+    text = pln.describe()
+    assert "equally-sized" in text and "single-device" in text
+    assert set(pln.estimate) == {"load_s", "kernel_s", "merge_s"}
+
+
+def test_fit_plan_near_square_default_and_want_c():
+    # no grid preference -> near-square; explicit C honored when it fits
+    p = resolve_scheme(None, (96, 128), 4, "2d.equally-sized")
+    assert p.grid == (2, 2)
+    q = fit_plan(Plan("2d", "equally-sized", "coo", "psum", (1, 4), "r"),
+                 (96, 128), 4, (8, 16))
+    assert q.grid == (1, 4)
+
+
+def test_fmt_and_merge_overrides_apply_to_auto():
+    reg = SparseMatrix.from_dense(regular_matrix(96, 128, 5, seed=1))
+    p = reg.plan(scheme="auto", merge="psum", fmt="csr")
+    assert p.partitioning == "2d"  # auto on a regular matrix
+    assert p.merge == "psum" and p.fmt == "csr"
+
+
+def test_mismatched_mesh_fails_fast():
+    from repro import compat
+
+    mesh = compat.make_mesh((1,), ("parts",), devices=jax.devices()[:1])
+    sm = SparseMatrix.from_dense(_mat("float32"))
+    with pytest.raises(ValueError, match="does not match"):
+        sm.plan(scheme="2d.equally-sized", mesh=mesh)
+
+
+def test_unfitted_plan_inspectable_for_other_hardware():
+    from repro.core.adaptive import HardwareModel
+
+    sm = SparseMatrix.from_dense(scale_free_matrix(256, 256, 6000, seed=2))
+    pln = sm.plan(scheme="auto", hw=HardwareModel.single_pod(), fit=False)
+    assert pln.grid == (256, 1)  # the paper pod plan, not this machine's
+
+
+def test_plan_errors():
+    sm = SparseMatrix.from_dense(_mat("float32"))
+    with pytest.raises(ValueError, match="unknown scheme"):
+        sm.plan(scheme="3d")
+    with pytest.raises(ValueError, match="unknown impl"):
+        sm.plan(impl="cuda")
+    with pytest.raises(ValueError, match="single-device"):
+        sm.plan(impl="pallas", devices=jax.devices())
+    with pytest.raises(ValueError, match="not both"):
+        sm.plan(mesh=object(), devices=jax.devices())
+    with pytest.raises(ValueError, match="shard_map program"):
+        sm.plan().program()
+
+
+# ------------------------------------------------- pallas trace boundary
+
+
+def test_pallas_traced_arrays_raise_early():
+    from repro.kernels.ops import spmv
+
+    m = F.dense_to_coo(_mat("float32"))
+    x = jnp.zeros(m.cols, jnp.float32)
+    with pytest.raises(ValueError, match="concrete"):
+        jax.jit(lambda mm, xx: spmv(mm, xx, impl="pallas"))(m, x)
+    # the xla impl stays traceable
+    y = jax.jit(lambda mm, xx: spmv(mm, xx, impl="xla"))(m, x)
+    assert y.shape == (m.rows,)
+
+
+# ------------------------------------------------- deprecation shims
+
+
+def test_old_entry_points_still_resolve():
+    from repro.core.spmv import spmv as core_spmv
+    from repro.kernels.ops import spmv as ops_spmv
+    from repro.engine import SpmvEngine
+    from repro.engine.registry import fingerprint_matrix as reg_fp
+    from repro.api import fingerprint_matrix as api_fp
+
+    assert core_spmv is ops_spmv
+    assert reg_fp is api_fp
+    a = regular_matrix(64, 80, 4, seed=7)
+    x = np.random.default_rng(0).standard_normal(80).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(core_spmv(F.dense_to_coo(a), jnp.asarray(x))), a @ x,
+        rtol=1e-4, atol=1e-5,
+    )
+    eng = SpmvEngine(cache_capacity=2)
+    eng.register("m", a)
+    np.testing.assert_allclose(eng.multiply("m", x), a @ x,
+                               rtol=1e-3, atol=1e-4)
+
+
+# ------------------------------------------------- distributed parity grid
+
+
+@pytest.fixture(scope="module")
+def api_dist_output():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tests", "_api_runner.py")],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    if "API SKIP" in proc.stdout:
+        pytest.skip("distributed api tests need 4 (forced) devices")
+    if proc.returncode != 0:
+        pytest.fail(f"api runner crashed:\n{proc.stderr[-3000:]}")
+    return proc.stdout
+
+
+def test_api_multi_device_all_ok(api_dist_output):
+    assert "API DONE" in api_dist_output
+    assert "FAIL" not in api_dist_output
+
+
+@pytest.mark.parametrize("fmt", ["coo", "csr", "bcoo", "bcsr"])
+@pytest.mark.parametrize("part", ["1d", "2d"])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_api_distributed_parity(api_dist_output, fmt, part, dtype):
+    assert f"API parity {fmt}.{part}.{dtype}: OK" in api_dist_output

@@ -160,6 +160,23 @@ def test_lru_eviction_at_capacity():
         eng.multiply("b", np.zeros(128, np.float32))
 
 
+def test_eviction_deletes_placed_device_arrays():
+    import jax
+
+    eng = SpmvEngine(cache_capacity=1)
+    mats = _mats()
+    eng.register("a", mats["regular"], warmup=False)
+    leaves = jax.tree_util.tree_leaves(eng.plan_for("a").arrays)
+    assert leaves and not any(l.is_deleted() for l in leaves)
+    eng.register("b", mats["scale-free"], warmup=False)  # evicts a's plan
+    # eviction must proactively free the device-placed matrix, not wait on GC
+    assert all(l.is_deleted() for l in leaves)
+    x = np.zeros(128, np.float32)
+    np.testing.assert_allclose(
+        eng.multiply("b", x), mats["scale-free"] @ x, rtol=1e-3, atol=1e-4
+    )
+
+
 def test_plan_cache_unit():
     from repro.engine.plan_cache import CompiledPlan
 
@@ -256,6 +273,41 @@ def test_reregister_name_with_new_matrix_evicts_old_plan(engine):
     np.testing.assert_allclose(
         engine.multiply("m", x), mats["scale-free"] @ x, rtol=1e-3, atol=1e-4
     )
+
+
+def test_batcher_deadline_flush_without_explicit_flush(engine):
+    """Background mode flushes when the oldest request's deadline arrives."""
+    a = _mats()["regular"]
+    engine.register("m", a)
+    mb = MicroBatcher(engine, max_batch=8, buckets=(8,), max_delay_s=0.02)
+    rng = np.random.default_rng(5)
+    with mb:  # deadline-serving daemon; nobody calls flush()
+        vecs = [rng.standard_normal(a.shape[1]).astype(np.float32)
+                for _ in range(3)]
+        futs = [mb.submit("m", v) for v in vecs]
+        for f, v in zip(futs, vecs):
+            np.testing.assert_allclose(f.result(timeout=5), a @ v,
+                                       rtol=1e-3, atol=1e-4)
+    assert mb.deadline_flushes >= 1
+    # the 3 sub-max_batch requests coalesced instead of firing one-by-one
+    assert mb.vectors_run == 3 and mb.batches_run <= 2
+
+
+def test_batcher_per_request_deadline_orders_flush(engine):
+    """An urgent submit pulls the flush forward for its queue only."""
+    a = _mats()["regular"]
+    engine.register("m", a)
+    mb = MicroBatcher(engine, max_batch=8, buckets=(8,), max_delay_s=30.0)
+    x = np.ones(a.shape[1], np.float32)
+    with mb:
+        slow = mb.submit("m", np.zeros(a.shape[1], np.float32))
+        fast = mb.submit("m", x, deadline_s=0.01)
+        # the 0.01s deadline (not the 30s default) must drive the flush,
+        # and the whole queue rides along with the urgent request
+        np.testing.assert_allclose(fast.result(timeout=5), a @ x,
+                                   rtol=1e-3, atol=1e-4)
+        assert slow.done()
+    assert mb.batches_run == 1
 
 
 def test_batcher_delivers_failures(engine):
