@@ -43,9 +43,11 @@ class Executor:
     plan = None  # the ExecutionPlan this executor was compiled from
 
     def __call__(self, x) -> np.ndarray:
+        """y = A @ x for one vector x of shape (cols,); returns host rows."""
         raise NotImplementedError
 
     def batch(self, X) -> np.ndarray:
+        """Y = A @ X for X of shape (cols, B); one SpMM, returns host rows."""
         raise NotImplementedError
 
     def release(self) -> None:
@@ -67,32 +69,55 @@ class Executor:
 
 
 class SingleDeviceExecutor(Executor):
-    """kernels.ops-backed executor (XLA oracle or Pallas kernels)."""
+    """kernels.ops-backed executor (XLA oracle or Pallas kernels).
+
+    For ``impl="pallas"`` the host-side kernel plan (chunk planning for
+    COO/CSR, browptr expansion for BCSR) is built once at construction via
+    :func:`repro.kernels.ops.pallas_program`; every subsequent ``exe(x)`` /
+    ``exe.batch(X)`` runs only the kernel — SpMM batches dispatch onto the
+    lane-tiled multi-RHS grid, never a per-column loop.
+    """
 
     def __init__(self, plan, container, impl: str, interpret: bool = True):
         self.plan = plan
         self.container = container
         self.impl = impl
         self.interpret = interpret
+        self._pallas = (ops.pallas_program(container, interpret=interpret)
+                        if impl == "pallas" else None)
 
     def __call__(self, x) -> np.ndarray:
+        """y = A @ x (host rows).
+
+        Args:
+          x: (cols,) vector, or (cols, B) — forwarded to :meth:`batch`.
+
+        Raises:
+          TypeError: if x's dtype cannot safely cast to the matrix dtype.
+          ValueError: on a length mismatch with the matrix columns.
+        """
         x = self._check_x(x, self.container.cols, self.container.dtype)
         if x.ndim == 2:
             return self.batch(x)
+        if self._pallas is not None:
+            return np.asarray(self._pallas(jnp.asarray(x)))
         y = ops.spmv(self.container, jnp.asarray(x), impl=self.impl,
                      interpret=self.interpret)
         return np.asarray(y)
 
     def batch(self, X) -> np.ndarray:
+        """Y = A @ X for X of shape (cols, B) — one SpMM, any impl.
+
+        Raises:
+          TypeError/ValueError: as :meth:`__call__`, plus ValueError when X
+            is not 2D.
+        """
         X = self._check_x(X, self.container.cols, self.container.dtype)
         if X.ndim != 2:
             raise ValueError(f"batch expects X of shape (cols, B); got {X.shape}")
-        if self.impl == "xla":
-            return np.asarray(ops.spmm(self.container, jnp.asarray(X)))
-        # Pallas kernels are single-RHS: issue per column.
-        cols = [ops.spmv(self.container, jnp.asarray(X[:, j]), impl=self.impl,
-                         interpret=self.interpret) for j in range(X.shape[1])]
-        return np.stack([np.asarray(c) for c in cols], axis=1)
+        if self._pallas is not None:
+            return np.asarray(self._pallas(jnp.asarray(X)))
+        return np.asarray(ops.spmm(self.container, jnp.asarray(X)))
 
 
 class MeshExecutor(Executor):
@@ -151,7 +176,17 @@ class MeshExecutor(Executor):
     # -- the paper's three phases (Fig. 4), individually timeable ---------
 
     def place(self, x) -> jax.Array:
-        """Load phase: validate, pad and place x on the mesh (blocks)."""
+        """Load phase: validate, pad and place x on the mesh (blocks).
+
+        Args:
+          x: (cols,) vector or (cols, B) batch on the host.
+
+        Returns:
+          The device-placed (padded) x, sharded with the plan's x spec.
+
+        Raises:
+          TypeError/ValueError: on dtype or length mismatches.
+        """
         x = self._check_x(x, self.part.shape[1], self.part.dtype)
         if self.x_pad != x.shape[0]:
             x = np.pad(x, ((0, self.x_pad - x.shape[0]),)
@@ -160,13 +195,30 @@ class MeshExecutor(Executor):
         return jax.block_until_ready(xs)
 
     def run_raw(self, xs) -> jax.Array:
-        """Kernel phase: the jitted shard_map program (blocks)."""
+        """Kernel phase: the jitted shard_map program (blocks).
+
+        Args:
+          xs: device-placed x from :meth:`place`.
+
+        Returns:
+          Raw per-part output slices (still device-sharded).
+
+        Raises:
+          RuntimeError: if the executor was released (arrays deleted).
+        """
         if self.arrays is None:
             raise RuntimeError("executor released or never placed; recompile")
         return jax.block_until_ready(self.run(self.arrays, xs))
 
     def assemble(self, raw) -> np.ndarray:
-        """Retrieve phase: fetch + assemble global rows on the host."""
+        """Retrieve phase: fetch + assemble global rows on the host.
+
+        Args:
+          raw: the device output of :meth:`run_raw`.
+
+        Returns:
+          The assembled global y as a host ndarray (rows[, B]).
+        """
         meta = self.assemble_meta
         if self.plan is not None and self.plan.partitioning == "1d":
             out = D.SpmvOutput(raw, merge="none", **meta)
@@ -181,9 +233,34 @@ class MeshExecutor(Executor):
     # -- public surface ----------------------------------------------------
 
     def __call__(self, x) -> np.ndarray:
+        """y = A @ x: place -> run_raw -> assemble (the three Fig.-4 phases).
+
+        Args:
+          x: (cols,) vector or (cols, B) batch.
+
+        Returns:
+          Host rows (rows[, B]).
+
+        Raises:
+          TypeError/ValueError: on dtype/shape mismatch.
+          RuntimeError: if the executor was released.
+        """
         return self.assemble(self.run_raw(self.place(x)))
 
     def batch(self, X) -> np.ndarray:
+        """Y = A @ X as ONE distributed SpMM (the batch rides through the
+        same shard_map program; with impl="pallas" the local tile kernels
+        run their lane-tiled multi-RHS grids).
+
+        Args:
+          X: (cols, B) right-hand sides.
+
+        Returns:
+          Host rows (rows, B).
+
+        Raises:
+          ValueError: if X is not 2D (plus the __call__ errors).
+        """
         X = np.asarray(X)
         if X.ndim != 2:
             raise ValueError(f"batch expects X of shape (cols, B); got {X.shape}")

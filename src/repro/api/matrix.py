@@ -73,7 +73,19 @@ class SparseMatrix:
     @classmethod
     def from_dense(cls, a, dtype=None,
                    stats_block: Tuple[int, int] = (8, 16)) -> "SparseMatrix":
-        """Wrap a dense (host) array; ``dtype`` optionally converts values."""
+        """Wrap a dense (host) array.
+
+        Args:
+          a: 2D array-like; zeros define the sparsity structure.
+          dtype: optionally convert values (e.g. to bfloat16) up front.
+          stats_block: (r, c) blocking used for the block-format statistics.
+
+        Returns:
+          A SparseMatrix viewing ``a``.
+
+        Raises:
+          ValueError: if ``a`` is not 2D.
+        """
         a = np.asarray(a)
         if a.ndim != 2:
             raise ValueError(f"expected a 2D matrix, got shape {a.shape}")
@@ -84,7 +96,18 @@ class SparseMatrix:
 
     @classmethod
     def from_scipy(cls, m, dtype=None) -> "SparseMatrix":
-        """Wrap anything with scipy.sparse's ``tocoo()`` protocol."""
+        """Wrap anything with scipy.sparse's ``tocoo()`` protocol.
+
+        Args:
+          m: a scipy.sparse matrix (any format exposing ``tocoo()``).
+          dtype: optionally convert values.
+
+        Returns:
+          A SparseMatrix over the matrix's COO triplets.
+
+        Raises:
+          TypeError: if ``m`` has no ``tocoo`` method.
+        """
         if not hasattr(m, "tocoo"):
             raise TypeError(f"{type(m).__name__} has no .tocoo(); "
                             "expected a scipy.sparse matrix")
@@ -95,7 +118,19 @@ class SparseMatrix:
     @classmethod
     def from_parts(cls, rowind, colind, values, shape,
                    dtype=None) -> "SparseMatrix":
-        """Wrap raw COO triplets (duplicate coordinates are summed)."""
+        """Wrap raw COO triplets (duplicate coordinates are summed).
+
+        Args:
+          rowind/colind/values: equal-length 1D arrays of coordinates+values.
+          shape: global (rows, cols).
+          dtype: optionally convert values.
+
+        Returns:
+          A SparseMatrix over the triplets (densified lazily, on demand).
+
+        Raises:
+          ValueError: on length mismatches or out-of-range indices.
+        """
         rowind = np.asarray(rowind, np.int64).ravel()
         colind = np.asarray(colind, np.int64).ravel()
         values = np.asarray(values).ravel()
@@ -112,7 +147,18 @@ class SparseMatrix:
 
     @classmethod
     def from_format(cls, container) -> "SparseMatrix":
-        """Wrap an existing CSR/COO/BCSR/BCOO container."""
+        """Wrap an existing CSR/COO/BCSR/BCOO container.
+
+        Args:
+          container: a :mod:`repro.core.formats` container instance; it is
+            kept and reused when a plan requests the same format.
+
+        Returns:
+          A SparseMatrix over the container.
+
+        Raises:
+          TypeError: for any other container type.
+        """
         if not isinstance(container, _CONTAINERS):
             raise TypeError(f"unknown container {type(container).__name__}")
         return cls(container=container, shape=container.shape,
@@ -166,7 +212,19 @@ class SparseMatrix:
 
     def container(self, fmt: str, block: Tuple[int, int] = (8, 16),
                   dtype=None):
-        """Build (and cache) the requested container format."""
+        """Build (and cache) the requested container format.
+
+        Args:
+          fmt: "csr" | "coo" | "bcsr" | "bcoo".
+          block: (r, c) tile shape for the block formats.
+          dtype: value dtype of the built container (default: matrix dtype).
+
+        Returns:
+          The :mod:`repro.core.formats` container (cached per fmt/dtype).
+
+        Raises:
+          ValueError: for an unknown ``fmt``.
+        """
         dtype = self.dtype if dtype is None else np.dtype(dtype)
         key = fmt if dtype == self.dtype else f"{fmt}:{dtype.str}"
         got = self._containers.get(key)
@@ -213,29 +271,37 @@ class SparseMatrix:
     ) -> ExecutionPlan:
         """Resolve scheme + placement into an inspectable ExecutionPlan.
 
-        scheme       : "auto" (paper Rec. #3 rules fitted to the pool), a
-                       string like "1d.nnz" / "2d.equally-sized", or an
-                       explicit adaptive.Plan.
-        impl         : "xla" (any backend, the distributed path) or "pallas"
-                       (TPU kernels; single-device only, interpret on CPU).
-        mesh/devices : give either to plan a distributed shard_map program;
-                       omit both for single-device execution.
-        partitioning : force "1d"/"2d" over the adaptive choice.
-        fmt/merge/grid: override single dimensions of the resolved scheme.
-        fit          : False inspects the paper plan for ``hw`` as-is, without
-                       fitting its grid to this pool (not compilable unless
-                       the pool happens to match).
+        Args:
+          scheme: "auto" (paper Rec. #3 rules fitted to the pool), a string
+            like "1d.nnz" / "2d.equally-sized", or an explicit adaptive.Plan.
+          impl: "xla" (the jnp oracles; lower on every backend) or "pallas"
+            (the TPU kernels; ``interpret=True`` validates them on CPU).
+            Both compose with ``mesh=``/``devices=``: distributed plans run
+            the chosen impl as the per-shard tile kernel inside shard_map.
+          hw: HardwareModel driving the analytic scheme selection/estimates.
+          mesh/devices: give either to plan a distributed shard_map program;
+            omit both for single-device execution.
+          partitioning: force "1d"/"2d" over the adaptive choice.
+          fmt/merge/grid: override single dimensions of the resolved scheme.
+          block: (r, c) tile for the block formats and the stats blocking.
+          interpret: Pallas interpret mode (keep True off-TPU).
+          fit: False inspects the paper plan for ``hw`` as-is, without
+            fitting its grid to this pool (not compilable unless the pool
+            happens to match).
+
+        Returns:
+          An inspectable :class:`~repro.api.plan.ExecutionPlan`; call
+          ``.compile()`` on it for an Executor.
+
+        Raises:
+          ValueError: unknown impl/scheme, both mesh= and devices= given, or
+            a user mesh whose shape the fitted plan cannot lay out on.
         """
         if impl not in ("xla", "pallas"):
             raise ValueError(f"unknown impl {impl!r}: 'xla' or 'pallas'")
         if mesh is not None and devices is not None:
             raise ValueError("pass mesh= or devices=, not both")
         distributed = mesh is not None or devices is not None
-        if distributed and impl == "pallas":
-            raise ValueError(
-                "impl='pallas' is single-device (the kernels run per chip); "
-                "distributed plans use the XLA shard_map path"
-            )
         if mesh is not None:
             mesh_shape = tuple(mesh.devices.shape)
             n_devices = int(np.prod(mesh_shape))
@@ -285,5 +351,10 @@ class SparseMatrix:
         )
 
     def compile(self, **plan_kwargs):
-        """Shorthand: ``.plan(**kw).compile()``."""
+        """Shorthand: ``.plan(**plan_kwargs).compile()``.
+
+        Returns:
+          An :class:`~repro.api.executor.Executor` ready to serve
+          ``exe(x)`` / ``exe.batch(X)``.
+        """
         return self.plan(**plan_kwargs).compile()

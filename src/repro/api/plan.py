@@ -227,6 +227,13 @@ class ExecutionPlan:
         return tag + (".ring" if self.ring else "")
 
     def describe(self) -> str:
+        """Human-readable one-plan summary (scheme, impl, placement, reason,
+        analytic Fig.-4 estimate).  The exact output format is shown in
+        docs/architecture.md.
+
+        Returns:
+          A multi-line string; stable enough to grep in tooling.
+        """
         s = self.scheme
         where = (f"mesh{tuple(self.mesh.devices.shape)}" if self.is_distributed
                  else "single-device")
@@ -288,20 +295,45 @@ class ExecutionPlan:
                 if self.ring_counts is None:
                     raise ValueError("ring plans need ring_counts "
                                      "(see distributed.bucket_by_source_shard)")
+                if self.impl != "xla":
+                    raise ValueError("the 1D ring schedule runs the XLA local "
+                                     "kernel only (impl='xla')")
                 return D.spmv_1d_ring(part, self.ring_counts, self.mesh, axes[0])
-            return D.spmv_1d(part, self.mesh, axes[0])
-        return D.spmv_2d(part, self.mesh, axes, merge=self.merge)
+            return D.spmv_1d(part, self.mesh, axes[0], impl=self.impl,
+                             interpret=self.interpret)
+        return D.spmv_2d(part, self.mesh, axes, merge=self.merge,
+                         impl=self.impl, interpret=self.interpret)
+
+    def _pallas_extra(self, part: PartitionedMatrix) -> Optional[dict]:
+        """Host chunk-plan arrays to place with the matrix (Pallas scalar
+        formats only; block formats run on the partition arrays as-is)."""
+        if self.impl == "pallas" and not self.ring and self.fmt in ("coo", "csr"):
+            return D.pallas_chunk_arrays(part)
+        return None
 
     def program(self, part: Optional[PartitionedMatrix] = None):
         """Build the shard_map call object (with ``.jitted``) WITHOUT placing
-        the matrix — what the dry-run lowers against abstract avals."""
+        the matrix — what the dry-run lowers against abstract avals.
+
+        Raises:
+          ValueError: for single-device plans (no shard_map program exists).
+        """
         if not self.is_distributed:
             raise ValueError("single-device plans have no shard_map program; "
                              "call .compile() instead")
         return self._program(part if part is not None else self._partition())
 
     def compile(self) -> Executor:
-        """Partition (if needed), place and trace — returns the Executor."""
+        """Partition (if needed), place and trace — returns the Executor.
+
+        Single-device plans wrap the chosen container format in a
+        :class:`~repro.api.executor.SingleDeviceExecutor` (for impl="pallas"
+        the host-side kernel plan is built here, once).  Distributed plans
+        partition, build the shard_map program with the selected local tile
+        kernel (XLA oracles or Pallas), place the matrix — plus, for Pallas
+        scalar formats, the per-shard chunk plans — and return a
+        :class:`~repro.api.executor.MeshExecutor`.
+        """
         import time as _time
 
         if not self.is_distributed:
@@ -309,19 +341,15 @@ class ExecutionPlan:
                                               dtype=self.dtype)
             return SingleDeviceExecutor(self, container, self.impl,
                                         self.interpret)
-        if self.impl != "xla":
-            raise ValueError(
-                "distributed plans run the XLA shard_map path; the Pallas "
-                "kernels are single-device (impl='pallas' needs mesh=None)"
-            )
         t0 = _time.perf_counter()
         part = self._partition()
         axes = self.axes
         program = self._program(part)
+        extra = self._pallas_extra(part)
         if self.partitioning == "1d":
-            placed = D.place_1d(part, self.mesh, axes[0])
+            placed = D.place_1d(part, self.mesh, axes[0], extra=extra)
         else:
-            placed = D.place_2d(part, self.mesh, axes)
+            placed = D.place_2d(part, self.mesh, axes, extra=extra)
         exe = MeshExecutor(
             self, part, self.mesh, axes, program,
             x_spec=self._x_spec(), x_pad=self._x_pad(part), merge=self.merge,

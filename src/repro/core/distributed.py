@@ -49,6 +49,7 @@ __all__ = [
     "spmv_1d_ring",
     "assemble_rows",
     "bucket_by_source_shard",
+    "pallas_chunk_arrays",
 ]
 
 
@@ -75,6 +76,102 @@ def _local_spmv(mat: PartitionedMatrix, sl, x_local: jax.Array) -> jax.Array:
     )
 
 
+def _pallas_span(h_pad: int) -> int:
+    """Output-window height for per-shard chunk plans: the padded tile height,
+    8-sublane aligned and capped at the single-device ROW_SPAN (local tiles
+    are far shorter than a whole matrix)."""
+    from repro.kernels.coo_spmv import ROW_SPAN
+
+    return max(8, min(ROW_SPAN, -(-h_pad // 8) * 8))
+
+
+def pallas_chunk_arrays(mat: PartitionedMatrix, chunk: int | None = None) -> dict:
+    """Host-side per-shard Pallas chunk plans for a scalar-format partition.
+
+    Builds one windowed :class:`~repro.kernels.coo_spmv.ChunkPlan` per part
+    (row-granular for CSR, element-granular for COO — the same balancing
+    semantics the single-device kernels use) against the uniform padded tile
+    height ``h_pad``, and stacks them with a leading part axis
+    (:func:`~repro.kernels.coo_spmv.stack_chunk_plans`) so they can be
+    ``device_put`` alongside the matrix arrays and sliced per shard inside
+    ``shard_map``.  Matrices are preprocessing artifacts (paper §3.1): this
+    runs once per compiled plan, never per request.
+
+    Returns a dict of host arrays keyed ``chunk_rowind`` / ``chunk_colind`` /
+    ``chunk_values`` (P, n_chunks, E) and ``chunk_window`` / ``chunk_count``
+    (P, n_chunks).  The static window metadata is derived from ``mat`` alone
+    (``_pallas_span``), so the program builder needs no side channel.
+    """
+    from repro.kernels.coo_spmv import CHUNK_E, plan_chunks, stack_chunk_plans
+
+    if mat.fmt not in ("coo", "csr"):
+        raise ValueError("chunk plans are for scalar formats; block formats "
+                         "run bcoo_spmv_pallas on the partition arrays")
+    chunk = CHUNK_E if chunk is None else chunk
+    span = _pallas_span(mat.h_pad)
+    rowind = np.asarray(mat.rowind)
+    colind = np.asarray(mat.colind)
+    values = np.asarray(mat.values)
+    nnz = np.asarray(mat.nnz)
+    plans = []
+    for p in range(mat.n_parts):
+        n = int(nnz[p])
+        plans.append(plan_chunks(
+            rowind[p, :n], colind[p, :n], values[p, :n], mat.h_pad,
+            chunk=chunk, span=span, row_granular=(mat.fmt == "csr"),
+        ))
+    stacked = stack_chunk_plans(plans)
+    return {f"chunk_{k}": v for k, v in stacked.items()
+            if isinstance(v, np.ndarray)}
+
+
+def _local_kernel(mat: PartitionedMatrix, impl: str, interpret: bool):
+    """Build the per-shard kernel ``f(sl, x_local) -> y (h_pad[, B])``.
+
+    impl="xla" dispatches the jnp oracles (lower everywhere, shard-safe);
+    impl="pallas" runs the TPU kernels on the local tile — the chunked
+    windowed kernel for COO/CSR (plans prebuilt host-side by
+    :func:`pallas_chunk_arrays` and carried in the placed arrays under
+    ``chunk_*``), the block kernel for BCSR/BCOO.  Both impls return the
+    values dtype (accumulation happens wider inside, matching the oracle
+    contract the merge collectives rely on).
+    """
+    if impl == "xla":
+        return lambda sl, x_local: _local_spmv(mat, sl, x_local)
+    if impl != "pallas":
+        raise ValueError(f"unknown impl {impl!r}: 'xla' or 'pallas'")
+    dtype = mat.dtype
+
+    if mat.fmt in ("coo", "csr"):
+        from repro.kernels.coo_spmv import ChunkPlan, coo_spmv_pallas
+
+        span = _pallas_span(mat.h_pad)
+        n_windows = max(1, -(-mat.h_pad // span))
+
+        def run_scalar(sl, x_local):
+            plan = ChunkPlan(
+                rowind=sl["chunk_rowind"], colind=sl["chunk_colind"],
+                values=sl["chunk_values"], window=sl["chunk_window"],
+                count=sl["chunk_count"], n_windows=n_windows,
+                out_rows=mat.h_pad, span=span,
+            )
+            y = coo_spmv_pallas(plan, x_local, interpret=interpret)
+            return y.astype(dtype) if y.dtype != dtype else y
+
+        return run_scalar
+
+    from repro.kernels.bcsr_spmv import bcoo_spmv_pallas
+
+    def run_block(sl, x_local):
+        y = bcoo_spmv_pallas(
+            sl["rowind"], sl["colind"], sl["values"], x_local, mat.h_pad,
+            nblocks=sl["nnz"], interpret=interpret,
+        )
+        return y.astype(dtype) if y.dtype != dtype else y
+
+    return run_block
+
+
 def _slice0(tree):
     """Strip the leading size-1 shard axis inside shard_map."""
     return jax.tree.map(lambda a: a[0], tree)
@@ -96,20 +193,32 @@ def _arrays(mat: PartitionedMatrix) -> dict:
     )
 
 
-def place_1d(mat: PartitionedMatrix, mesh, axis: str | tuple = "data") -> dict:
-    """Shard the part axis of a 1D partition over one (or more) mesh axes."""
+def place_1d(mat: PartitionedMatrix, mesh, axis: str | tuple = "data",
+             extra: dict | None = None) -> dict:
+    """Shard the part axis of a 1D partition over one (or more) mesh axes.
+
+    ``extra`` merges additional host arrays with the same leading part axis
+    into the placed pytree (e.g. the Pallas ``chunk_*`` plan arrays).
+    """
     spec = P(axis)
-    return jax.device_put(
-        _arrays(mat), NamedSharding(mesh, spec)
-    )
+    arrs = _arrays(mat)
+    if extra:
+        arrs.update(extra)
+    return jax.device_put(arrs, NamedSharding(mesh, spec))
 
 
-def place_2d(mat: PartitionedMatrix, mesh, axes=("data", "model")) -> dict:
-    """Reshape parts (P,)->(R,C) and shard over (row-axis, col-axis)."""
+def place_2d(mat: PartitionedMatrix, mesh, axes=("data", "model"),
+             extra: dict | None = None) -> dict:
+    """Reshape parts (P,)->(R,C) and shard over (row-axis, col-axis).
+
+    ``extra`` merges additional part-leading host arrays (see place_1d).
+    """
     R, C = mat.grid
-    arrs = {
-        k: v.reshape((R, C) + v.shape[1:]) for k, v in _arrays(mat).items()
-    }
+    arrs = _arrays(mat)
+    if extra:
+        arrs.update(extra)
+    arrs = {k: np.asarray(v).reshape((R, C) + v.shape[1:])
+            for k, v in arrs.items()}
     return jax.device_put(arrs, NamedSharding(mesh, P(axes[0], axes[1])))
 
 
@@ -139,6 +248,8 @@ def spmv_1d(
     mesh,
     axis: str = "data",
     x_sharding_axis: str | None = None,
+    impl: str = "xla",
+    interpret: bool = True,
 ) -> callable:
     """Build jitted distributed 1D SpMV: (placed_arrays, x) -> SpmvOutput.
 
@@ -146,6 +257,11 @@ def spmv_1d(
     all-gathered inside — the paper's broadcast/load step, now on ICI.  Row-
     granular schemes need no merge; element-granular ('1d.nnz') corrects the
     single split row per boundary with one collective_permute.
+
+    ``impl`` selects the per-shard tile kernel (XLA oracles or the Pallas
+    kernels); for impl="pallas" on scalar formats the placed arrays must
+    include the ``chunk_*`` plan arrays (``pallas_chunk_arrays``) — pass
+    them as ``extra=`` to :func:`place_1d`.
     """
     Pn = mat.n_parts
     head_shared, next_shared, recv_pos = _boundary_meta(mat)
@@ -154,11 +270,12 @@ def spmv_1d(
     rp = jnp.asarray(recv_pos.astype(np.int32))
     needs_merge = mat.scheme == "1d.nnz"
     perm = [(i, i - 1) for i in range(1, Pn)]
+    local = _local_kernel(mat, impl, interpret)
 
     def _step(arrs, hs_l, ns_l, rp_l, x_shard):
         sl = _slice0(arrs)
         x_full = jax.lax.all_gather(x_shard, axis, tiled=True)
-        y = _local_spmv(mat, sl, x_full)  # (h_pad[, B])
+        y = local(sl, x_full)  # (h_pad[, B])
         if needs_merge and Pn > 1:
             send = jnp.where(hs_l[0], y[0], jnp.zeros_like(y[0]))
             recv = jax.lax.ppermute(send, axis, perm)
@@ -364,6 +481,8 @@ def spmv_2d(
     mesh,
     axes: Tuple[str, str] = ("data", "model"),
     merge: str | None = None,
+    impl: str = "xla",
+    interpret: bool = True,
 ) -> callable:
     """Build jitted distributed 2D SpMV: (placed_arrays, x) -> SpmvOutput.
 
@@ -376,6 +495,10 @@ def spmv_2d(
                         into a global row buffer and all-reduced over the
                         whole mesh — faithful to the paper's retrieve+merge
                         path and its bottleneck (Obs. 12).
+
+    ``impl``/``interpret`` select the per-shard tile kernel exactly as in
+    :func:`spmv_1d` (Pallas scalar formats need the placed ``chunk_*``
+    arrays, via ``place_2d(..., extra=pallas_chunk_arrays(mat))``).
     """
     R, C = mat.grid
     da, ma = axes
@@ -393,6 +516,7 @@ def spmv_2d(
     if aligned and mat.shape[0] % R != 0:
         raise ValueError(f"equally-sized needs rows % R == 0")
     rows_pad = mat.h_pad * R if aligned else -(-mat.shape[0] // 8) * 8
+    local = _local_kernel(mat, impl, interpret)
 
     def _step(arrs, x_shard):
         sl = _slice0(jax.tree.map(lambda a: a.reshape((-1,) + a.shape[2:]), arrs))
@@ -412,7 +536,7 @@ def spmv_2d(
                 x_loc = jnp.pad(
                     x_loc, ((0, mat.w_pad - x_loc.shape[0]),) + ((0, 0),) * (x_loc.ndim - 1)
                 )
-        y = _local_spmv(mat, sl, x_loc)  # (h_pad[, B])
+        y = local(sl, x_loc)  # (h_pad[, B])
         if merge == "psum":
             y = jax.lax.psum(y, ma)
             return y[None, None]

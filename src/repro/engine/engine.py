@@ -50,9 +50,29 @@ class SpmvEngine:
         telemetry: Optional[Telemetry] = None,
         block: Tuple[int, int] = (8, 16),
         hw: Optional[HardwareModel] = None,
+        impl: str = "xla",
     ) -> None:
+        """Create a serving engine over a device pool.
+
+        Args:
+          devices: JAX devices to serve from (default: all local devices).
+          cache_capacity: max compiled plans held (LRU; placed matrices pin
+            device memory, so this is the engine's memory bound).
+          telemetry: a shared Telemetry sink (default: a fresh one).
+          block: (r, c) block shape for the block formats and matrix stats.
+          hw: HardwareModel driving adaptive scheme selection.
+          impl: default local tile kernel for registered matrices — "xla"
+            (oracles) or "pallas" (TPU kernels; interpret mode off-TPU).
+            ``register(..., impl=...)`` overrides per matrix.
+
+        Raises:
+          ValueError: for an unknown ``impl``.
+        """
         import jax
 
+        if impl not in ("xla", "pallas"):
+            raise ValueError(f"unknown impl {impl!r}: 'xla' or 'pallas'")
+        self.impl = impl
         self.devices = list(devices) if devices is not None else jax.devices()
         self.cache = PlanCache(cache_capacity)
         self.registry = MatrixRegistry()
@@ -85,7 +105,9 @@ class SpmvEngine:
 
     # -------------------------------------------------------------- building
 
-    def _build(self, sm: SparseMatrix, plan: Plan, key: PlanKey) -> CompiledPlan:
+    def _build(self, sm: SparseMatrix, plan: Plan, key: PlanKey,
+               impl: str) -> CompiledPlan:
+        """Run the api chain once for ``plan`` and wrap the MeshExecutor."""
         t0 = time.perf_counter()
         self.partition_count += 1
         if plan.partitioning == "1d":
@@ -93,10 +115,11 @@ class SpmvEngine:
         else:
             mesh = self._mesh(tuple(plan.grid), _AXES_2D)
         exe = sm.plan(
-            scheme=plan, mesh=mesh, impl="xla", block=self.block, hw=self.hw
+            scheme=plan, mesh=mesh, impl=impl, block=self.block, hw=self.hw
         ).compile()
         return CompiledPlan(
             key=key,
+            impl=impl,
             plan=plan,
             part=exe.part,
             arrays=exe.arrays,
@@ -122,19 +145,40 @@ class SpmvEngine:
         plan: Optional[Plan] = None,
         partitioning: Optional[str] = None,
         warmup: bool = True,
+        impl: Optional[str] = None,
     ) -> RegisteredMatrix:
         """Fingerprint, plan, partition, place and compile ``a`` under ``name``.
 
         Identical matrices (same fingerprint) registered again — under the
-        same or another name — reuse the cached executable.  ``partitioning``
-        forces "1d"/"2d" over the adaptive choice; ``plan`` overrides it
-        entirely (still fitted to the device pool).
+        same or another name — reuse the cached executable.
+
+        Args:
+          name: serving handle for :meth:`multiply`.
+          a: dense host matrix (2D).
+          dtype: optionally convert values before planning.
+          plan: explicit adaptive.Plan override (still fitted to the pool).
+          partitioning: force "1d"/"2d" over the adaptive choice.
+          warmup: trace + compile the vector-shaped program now, off the
+            request path.
+          impl: local tile kernel override — "xla" or "pallas"; default is
+            the engine-wide ``self.impl``.  Pallas plans carry their chunk
+            plans in the cached placement, so the micro-batched SpMM path
+            runs the lane-tiled Pallas kernels end to end.
+
+        Returns:
+          The RegisteredMatrix registry entry.
+
+        Raises:
+          ValueError: for a non-2D matrix or unknown ``impl``.
         """
         a = np.asarray(a)
         if dtype is not None:
             a = a.astype(dtype)
         if a.ndim != 2:
             raise ValueError(f"expected a 2D matrix, got shape {a.shape}")
+        impl = self.impl if impl is None else impl
+        if impl not in ("xla", "pallas"):
+            raise ValueError(f"unknown impl {impl!r}: 'xla' or 'pallas'")
         sm = SparseMatrix.from_dense(a, stats_block=self.block)
         plan = resolve_scheme(
             sm.stats, a.shape, self.n_devices,
@@ -143,10 +187,11 @@ class SpmvEngine:
         )
         fp = sm.fingerprint()
         scheme_id = f"{plan.partitioning}.{plan.scheme}.{plan.fmt}.{plan.merge}"
-        key: PlanKey = (fp, tuple(plan.grid), np.dtype(a.dtype).str, scheme_id)
+        key: PlanKey = (fp, tuple(plan.grid), np.dtype(a.dtype).str, scheme_id,
+                        impl)
         compiled = self.cache.get(key)
         if compiled is None:
-            compiled = self._build(sm, plan, key)
+            compiled = self._build(sm, plan, key, impl)
             self.cache.put(compiled)
         entry = RegisteredMatrix(
             name=name,
@@ -178,7 +223,24 @@ class SpmvEngine:
         return compiled
 
     def multiply(self, name: str, x) -> np.ndarray:
-        """y = A @ x for registered ``name``; x is (cols,) or (cols, B)."""
+        """y = A @ x for registered ``name``.
+
+        Serves from the cached executor: place x -> run the jitted program ->
+        assemble rows; the three phase times land in telemetry (Fig.-17
+        load/kernel/retrieve split).
+
+        Args:
+          name: handle from :meth:`register`.
+          x: (cols,) vector, or (cols, B) for a batched SpMM request.
+
+        Returns:
+          Host rows (rows[, B]).
+
+        Raises:
+          KeyError: unknown ``name``.
+          RuntimeError: the plan was evicted from the cache (re-register).
+          TypeError/ValueError: dtype or shape mismatch with the matrix.
+        """
         entry = self.registry.get(name)
         cp = self._compiled(entry)
         exe = cp.executor
@@ -216,9 +278,13 @@ class SpmvEngine:
         return cp.trace_count if cp is not None else 0
 
     def plan_for(self, name: str) -> Optional[CompiledPlan]:
+        """The CompiledPlan serving ``name`` (None if evicted); does not
+        touch LRU order."""
         return self.cache.peek(self.registry.get(name).cache_key)
 
     def unregister(self, name: str) -> None:
+        """Drop ``name``; evicts its compiled plan unless another registered
+        name still shares it (same fingerprint/scheme/impl)."""
         entry = self.registry.remove(name)
         if entry is not None and not any(
             e.cache_key == entry.cache_key for e in self.registry

@@ -2,14 +2,15 @@
 
 A *compiled plan* is everything the one-shot path rebuilds per call and the
 engine refuses to: the PartitionedMatrix (host preprocessing), the
-device-placed arrays (the paper's load-matrix transfer) and the traced +
+device-placed arrays (the paper's load-matrix transfer, plus the Pallas
+chunk-plan arrays when the plan runs the TPU kernels) and the traced +
 jitted shard_map executable.  Entries are keyed on
 
-    (matrix fingerprint, mesh shape, dtype, scheme)
+    (matrix fingerprint, mesh shape, dtype, scheme, impl)
 
-so the same matrix served on a different mesh, in a different precision, or
-under a forced scheme compiles its own entry, while a re-registered identical
-matrix reuses the existing one (hit).  Eviction is LRU at a fixed capacity —
+so the same matrix served on a different mesh, in a different precision,
+under a forced scheme, or on the other kernel impl compiles its own entry,
+while a re-registered identical matrix reuses the existing one (hit).  Eviction is LRU at a fixed capacity —
 placed matrices pin device memory, so the cache bound is the engine's memory
 bound; evicted entries have their device-placed arrays explicitly deleted
 (``CompiledPlan.release``) rather than waiting for GC, so the HBM the bound
@@ -26,13 +27,13 @@ from repro.core.partition import PartitionedMatrix
 
 __all__ = ["PlanKey", "CompiledPlan", "CacheStats", "PlanCache"]
 
-# (fingerprint, mesh_shape, dtype, scheme) — the identity of one executable
-PlanKey = Tuple[str, tuple, str, str]
+# (fingerprint, mesh_shape, dtype, scheme, impl) — identity of one executable
+PlanKey = Tuple[str, tuple, str, str, str]
 
 
 @dataclass
 class CompiledPlan:
-    """A ready-to-run SpMV program for one (matrix, mesh, dtype, scheme)."""
+    """A ready-to-run SpMV program for one (matrix, mesh, dtype, scheme, impl)."""
 
     key: PlanKey
     plan: Plan
@@ -48,6 +49,7 @@ class CompiledPlan:
     assemble_meta: Optional[dict] = None  # host row_start/row_extent/rows
     requests_served: int = 0  # multiply() calls answered by this executable
     executor: Optional[object] = None  # repro.api MeshExecutor backing `run`
+    impl: str = "xla"  # local tile kernel: "xla" oracles or "pallas" kernels
 
     @property
     def trace_count(self) -> int:

@@ -32,9 +32,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["bcoo_spmv_pallas", "DEFAULT_BLOCK"]
+from .instrument import record_build
+
+__all__ = ["bcoo_spmv_pallas", "DEFAULT_BLOCK", "BATCH_TILE"]
 
 DEFAULT_BLOCK = (8, 128)  # MXU-aligned (sublane x lane)
+BATCH_TILE = 128  # SpMM lane tile: RHS columns per grid step
 
 
 def _acc_dtype(dtype):
@@ -46,8 +49,14 @@ def _acc_dtype(dtype):
 
 
 def _kernel(browind_ref, bcolind_ref, nb_ref, bval_ref, x_ref, y_ref):
-    """One grid step = one nonzero (r, c) block against its (c, B) x window."""
-    i = pl.program_id(0)
+    """One grid step = one nonzero (r, c) block against its (c, BT) x window.
+
+    Grid is (batch tiles, blocks): the block axis is innermost so the
+    accumulate-in-VMEM invariant (consecutive visits per block-row) holds per
+    batch tile; each batch tile replays the block stream against its own lane
+    slice of x/y.
+    """
+    i = pl.program_id(1)
     # First visit of this output window <=> first step or block-row changed
     # (stream is block-row sorted — format invariant).
     first = (i == 0) | (browind_ref[i] != browind_ref[jnp.maximum(i - 1, 0)])
@@ -72,16 +81,22 @@ def bcoo_spmv_pallas(
     out_rows: int,
     nblocks: jax.Array | int | None = None,
     interpret: bool = True,
+    batch_tile: int | None = None,
 ) -> jax.Array:
     """Block-sparse y = A @ x, A given as a block-row-sorted BCOO stream.
 
     Args:
       browind/bcolind: (nb_cap,) int32 block coordinates (block units).
       bvalues: (nb_cap, r, c) dense blocks, zero past ``nblocks``.
-      x: (cols,) or (cols, B); cols must be a multiple of c.
+      x: (cols,) for SpMV or (cols, B) for SpMM; x is zero-padded up to a
+        multiple of c so the per-block (c, BT) windows always align.  For
+        B > 1 the grid gains a leading lane-tiled batch axis (B padded to a
+        multiple of ``batch_tile``); each nonzero block becomes one
+        (r, c) x (c, BT) MXU issue per batch tile.
       out_rows: static output height (multiple of r).
       nblocks: true nonzero-block count (<= nb_cap); None means all.
       interpret: execute the kernel body in Python (CPU validation mode).
+      batch_tile: RHS columns per grid step; default ``min(B, BATCH_TILE)``.
 
     Returns y (out_rows[, B]) in the accumulation dtype (f32 for bf16 input,
     i32 for i8/i16 — the MXU accumulator semantics).
@@ -90,6 +105,11 @@ def bcoo_spmv_pallas(
     squeeze = x.ndim == 1
     xm = x[:, None] if squeeze else x
     B = xm.shape[1]
+    bt = max(1, min(B, BATCH_TILE if batch_tile is None else batch_tile))
+    b_pad = -(-B // bt) * bt
+    col_pad = -(-xm.shape[0] // c) * c
+    if col_pad != xm.shape[0] or b_pad != B:
+        xm = jnp.pad(xm, ((0, col_pad - xm.shape[0]), (0, b_pad - B)))
     nb = jnp.asarray(nb_cap if nblocks is None else nblocks, jnp.int32)
 
     # Sanitize padding coordinates: padded steps must revisit the *last real*
@@ -100,25 +120,29 @@ def bcoo_spmv_pallas(
     bcolind = jnp.where(k < nb, bcolind, 0)
 
     acc = _acc_dtype(bvalues.dtype)
+    record_build("bcoo", B)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
-        grid=(nb_cap,),
+        grid=(b_pad // bt, nb_cap),
         in_specs=[
-            pl.BlockSpec((1, r, c), lambda i, bri, bci, nb_: (i, 0, 0)),
-            pl.BlockSpec((c, B), lambda i, bri, bci, nb_: (bci[i], 0)),
+            pl.BlockSpec((1, r, c), lambda b, i, bri, bci, nb_: (i, 0, 0)),
+            pl.BlockSpec((c, bt), lambda b, i, bri, bci, nb_: (bci[i], b)),
         ],
-        out_specs=pl.BlockSpec((r, B), lambda i, bri, bci, nb_: (bri[i], 0)),
+        out_specs=pl.BlockSpec((r, bt), lambda b, i, bri, bci, nb_: (bri[i], b)),
     )
     y = pl.pallas_call(
         _kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((out_rows, B), acc),
+        out_shape=jax.ShapeDtypeStruct((out_rows, b_pad), acc),
         interpret=interpret,
     )(browind, bcolind, nb.reshape(1), bvalues, xm)
 
     # Block-rows with no nonzero blocks are never visited: mask them.
-    touched = jnp.zeros((out_rows // r,), jnp.bool_).at[browind].set(
-        k < nb, mode="drop"
-    )
+    # Scatter-add (not set): padded steps share the last real block-row id,
+    # and duplicate-index set order is unspecified.
+    touched = jnp.zeros((out_rows // r,), jnp.int32).at[browind].add(
+        (k < nb).astype(jnp.int32), mode="drop"
+    ) > 0
     y = jnp.where(jnp.repeat(touched, r)[:, None], y, 0)
+    y = y[:, :B]
     return y[:, 0] if squeeze else y

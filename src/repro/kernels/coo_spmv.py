@@ -25,6 +25,7 @@ the host-side chunk boundaries (kernels/csr_spmv.py).
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -32,10 +33,14 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["coo_spmv_pallas", "plan_chunks", "ChunkPlan", "CHUNK_E", "ROW_SPAN"]
+from .instrument import record_build
+
+__all__ = ["coo_spmv_pallas", "plan_chunks", "stack_chunk_plans", "ChunkPlan",
+           "CHUNK_E", "ROW_SPAN", "BATCH_TILE"]
 
 CHUNK_E = 512  # nnz per grid step (paper: 256-byte WRAM fetches; here VMEM-sized)
 ROW_SPAN = 512  # output window height (multiple of 8 sublanes)
+BATCH_TILE = 128  # SpMM lane tile: RHS columns per grid step (one lane row)
 
 
 def _acc_dtype(dtype):
@@ -48,7 +53,16 @@ def _acc_dtype(dtype):
 
 @dataclass(frozen=True)
 class ChunkPlan:
-    """Host-side chunking of a row-sorted COO stream (static per matrix)."""
+    """Host-side chunking of a row-sorted COO stream (static per matrix).
+
+    Array fields are normally concrete ``np.ndarray`` (built host-side by
+    :func:`plan_chunks`) but may be traced ``jax.Array`` with the same static
+    shapes — that is how the distributed layer runs this kernel inside
+    ``shard_map``: per-shard plans are stacked host-side
+    (:func:`stack_chunk_plans`), placed with the matrix, and re-wrapped as a
+    ChunkPlan per local shard.  Only the *shapes* and the three ints are
+    static to the kernel.
+    """
 
     rowind: np.ndarray  # (n_chunks, E) int32 — rows, relative to window start
     colind: np.ndarray  # (n_chunks, E) int32
@@ -119,8 +133,14 @@ def plan_chunks(
 
 
 def _kernel(win_ref, cnt_ref, ri_ref, ci_ref, val_ref, x_ref, y_ref):
-    """One grid step = one chunk of <=E elements in one SPAN-row window."""
-    j = pl.program_id(0)
+    """One grid step = one chunk of <=E elements in one SPAN-row window.
+
+    Grid is (batch tiles, chunks): the chunk axis is innermost so all chunks
+    of a window are visited consecutively per batch tile (the accumulate-in-
+    VMEM invariant); each batch tile revisits the chunk stream against its
+    own lane slice of x/y.
+    """
+    j = pl.program_id(1)
     first = (j == 0) | (win_ref[j] != win_ref[jnp.maximum(j - 1, 0)])
 
     @pl.when(first)
@@ -146,34 +166,55 @@ def coo_spmv_pallas(
     plan: ChunkPlan,
     x: jax.Array,
     interpret: bool = True,
+    batch_tile: int | None = None,
 ) -> jax.Array:
-    """Run the windowed COO kernel for a host-side ChunkPlan.
+    """Run the windowed COO kernel for a ChunkPlan (SpMV or multi-RHS SpMM).
 
-    x: (cols,) or (cols, B).  Returns y (out_rows[, B]) in accumulation dtype.
+    Args:
+      plan: host-built (or traced, see :class:`ChunkPlan`) chunk plan.
+      x: (cols,) for SpMV or (cols, B) for SpMM.  For B > 1 the grid gains a
+        leading lane-tiled batch axis: B is padded to a multiple of
+        ``batch_tile`` lanes and each grid step works on one (chunk, lane
+        tile) pair, reusing the same chunk stream across tiles.
+      interpret: run the kernel body in interpret mode (CPU validation).
+      batch_tile: RHS columns per grid step; default ``min(B, BATCH_TILE)``.
+
+    Returns:
+      y of shape (out_rows,) or (out_rows, B) in the accumulation dtype
+      (f32 for bf16 input, i32 for i8/i16).
     """
     squeeze = x.ndim == 1
     xm = x[:, None] if squeeze else x
     B = xm.shape[1]
+    bt = max(1, min(B, BATCH_TILE if batch_tile is None else batch_tile))
+    b_pad = -(-B // bt) * bt
+    if b_pad != B:
+        xm = jnp.pad(xm, ((0, 0), (0, b_pad - B)))
+    n_b = b_pad // bt
     n_chunks, E = plan.rowind.shape
     span = plan.span
     out_pad = plan.n_windows * span
     acc = _acc_dtype(plan.values.dtype)
+    if n_chunks == 0:  # empty matrix: nothing to launch
+        y = jnp.zeros((plan.out_rows, B), acc)
+        return y[:, 0] if squeeze else y
+    record_build("coo", B)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(n_chunks,),
+        grid=(n_b, n_chunks),
         in_specs=[
-            pl.BlockSpec((1, E), lambda j, w, c: (j, 0)),  # rowind chunk
-            pl.BlockSpec((1, E), lambda j, w, c: (j, 0)),  # colind chunk
-            pl.BlockSpec((1, E), lambda j, w, c: (j, 0)),  # values chunk
-            pl.BlockSpec(xm.shape, lambda j, w, c: (0, 0)),  # x resident
+            pl.BlockSpec((1, E), lambda b, j, w, c: (j, 0)),  # rowind chunk
+            pl.BlockSpec((1, E), lambda b, j, w, c: (j, 0)),  # colind chunk
+            pl.BlockSpec((1, E), lambda b, j, w, c: (j, 0)),  # values chunk
+            pl.BlockSpec((xm.shape[0], bt), lambda b, j, w, c: (0, b)),  # x tile
         ],
-        out_specs=pl.BlockSpec((span, B), lambda j, w, c: (w[j], 0)),
+        out_specs=pl.BlockSpec((span, bt), lambda b, j, w, c: (w[j], b)),
     )
     y = pl.pallas_call(
         _kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((out_pad, B), acc),
+        out_shape=jax.ShapeDtypeStruct((out_pad, b_pad), acc),
         interpret=interpret,
     )(
         jnp.asarray(plan.window),
@@ -183,12 +224,58 @@ def coo_spmv_pallas(
         jnp.asarray(plan.values),
         xm,
     )
-    # Windows with no chunks are never initialized: mask them.
+    # Windows with no chunks are never initialized: mask them.  Scatter-add
+    # (not set): several chunks — including padded count-0 ones — may carry
+    # the same window id, and duplicate-index set order is unspecified.
     touched = (
-        jnp.zeros((plan.n_windows,), jnp.bool_)
+        jnp.zeros((plan.n_windows,), jnp.int32)
         .at[jnp.asarray(plan.window)]
-        .set(jnp.asarray(plan.count) > 0, mode="drop")
-    )
+        .add((jnp.asarray(plan.count) > 0).astype(jnp.int32), mode="drop")
+    ) > 0
     y = jnp.where(jnp.repeat(touched, span)[:, None], y, 0)
-    y = y[: plan.out_rows]
+    y = y[: plan.out_rows, :B]
     return y[:, 0] if squeeze else y
+
+
+def stack_chunk_plans(plans: Sequence[ChunkPlan]) -> dict:
+    """Stack per-shard ChunkPlans into SPMD arrays with a leading part axis.
+
+    All plans must share span / n_windows / out_rows / chunk width (they do
+    when built per part of one PartitionedMatrix with uniform ``h_pad``).
+    Shards with fewer chunks are padded with empty chunks (count 0) whose
+    window id repeats the shard's last real window, so the padded grid steps
+    neither re-zero a window nor contribute values.
+
+    Returns a dict of host arrays — ``window``/``count`` of shape
+    (P, n_chunks) and ``rowind``/``colind``/``values`` of (P, n_chunks, E) —
+    ready for ``jax.device_put`` with the part axis sharded, plus the shared
+    static metadata under ``span`` / ``n_windows`` / ``out_rows``.
+    """
+    if not plans:
+        raise ValueError("stack_chunk_plans needs at least one plan")
+    first = plans[0]
+    for p in plans[1:]:
+        if (p.span, p.n_windows, p.out_rows, p.rowind.shape[1]) != (
+            first.span, first.n_windows, first.out_rows, first.rowind.shape[1]
+        ):
+            raise ValueError("per-shard chunk plans have mismatched metadata")
+    E = first.rowind.shape[1]
+    nc = max(1, max(p.rowind.shape[0] for p in plans))
+    Pn = len(plans)
+    ri = np.zeros((Pn, nc, E), np.int32)
+    ci = np.zeros((Pn, nc, E), np.int32)
+    vv = np.zeros((Pn, nc, E), np.asarray(first.values).dtype)
+    win = np.zeros((Pn, nc), np.int32)
+    cnt = np.zeros((Pn, nc), np.int32)
+    for p, plan in enumerate(plans):
+        n = plan.rowind.shape[0]
+        ri[p, :n] = plan.rowind
+        ci[p, :n] = plan.colind
+        vv[p, :n] = plan.values
+        win[p, :n] = plan.window
+        cnt[p, :n] = plan.count
+        if n:  # padding chunks revisit the last real window with count 0
+            win[p, n:] = plan.window[-1]
+    return dict(rowind=ri, colind=ci, values=vv, window=win, count=cnt,
+                span=first.span, n_windows=first.n_windows,
+                out_rows=first.out_rows)

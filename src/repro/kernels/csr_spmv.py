@@ -49,6 +49,11 @@ def csr_plan_chunks(
     )
 
 
-def csr_spmv_pallas(plan: ChunkPlan, x: jax.Array, interpret: bool = True):
-    """CSR SpMV/SpMM — same kernel, row-granular plan."""
-    return coo_spmv_pallas(plan, x, interpret=interpret)
+def csr_spmv_pallas(plan: ChunkPlan, x: jax.Array, interpret: bool = True,
+                    batch_tile: int | None = None):
+    """CSR SpMV/SpMM — same windowed kernel, row-granular chunk plan.
+
+    x may be (cols,) or (cols, B); multi-RHS batches are lane-tiled exactly
+    as in :func:`repro.kernels.coo_spmv.coo_spmv_pallas`.
+    """
+    return coo_spmv_pallas(plan, x, interpret=interpret, batch_tile=batch_tile)

@@ -9,8 +9,9 @@ is exactly the trade the paper studies for transfer padding (Obs. 10/14);
 benchmarks/fig9_single_core.py reports the padding efficiency next to the
 kernel time so the trade is visible.
 
-Grid: one step per tile of T rows.  The x tile stays VMEM-resident; colind
-and values stream in as (T, K) blocks.
+Grid: one step per (tile of T rows, lane tile of the batch).  The x tile
+stays VMEM-resident per batch tile; colind and values stream in as (T, K)
+blocks and are reused across batch tiles.
 """
 from __future__ import annotations
 
@@ -19,9 +20,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-__all__ = ["ell_spmv_pallas", "dense_to_ell", "ROW_TILE"]
+from .instrument import record_build
+
+__all__ = ["ell_spmv_pallas", "dense_to_ell", "ROW_TILE", "BATCH_TILE"]
 
 ROW_TILE = 64  # rows per grid step (8-sublane aligned)
+BATCH_TILE = 128  # SpMM lane tile: RHS columns per grid step
 
 
 def dense_to_ell(a: np.ndarray, k: int | None = None):
@@ -66,12 +70,30 @@ def ell_spmv_pallas(
     x: jax.Array,
     interpret: bool = True,
     row_tile: int = ROW_TILE,
+    batch_tile: int | None = None,
 ) -> jax.Array:
-    """y = A @ x with A in ELL form. x: (cols,) or (cols, B)."""
+    """y = A @ x with A in ELL form (SpMV or multi-RHS SpMM).
+
+    Args:
+      colind/values: (rows, K) padded-row layout from :func:`dense_to_ell`.
+      row_nnz: (rows,) real slots per row; the tail is masked.
+      x: (cols,) or (cols, B).  B > 1 adds a lane-tiled batch grid axis:
+        each grid step computes a (row tile, batch tile) output block.
+      interpret: run the kernel body in interpret mode (CPU validation).
+      row_tile: rows per grid step (8-sublane aligned).
+      batch_tile: RHS columns per grid step; default ``min(B, BATCH_TILE)``.
+
+    Returns:
+      y (rows,) or (rows, B) in the accumulation dtype.
+    """
     rows, K = values.shape
     squeeze = x.ndim == 1
     xm = x[:, None] if squeeze else x
     B = xm.shape[1]
+    bt = max(1, min(B, BATCH_TILE if batch_tile is None else batch_tile))
+    b_pad = -(-B // bt) * bt
+    if b_pad != B:
+        xm = jnp.pad(xm, ((0, 0), (0, b_pad - B)))
     T = min(row_tile, rows)
     pad_rows = -(-rows // T) * T
     if pad_rows != rows:
@@ -79,18 +101,19 @@ def ell_spmv_pallas(
         values = jnp.pad(values, ((0, pad_rows - rows), (0, 0)))
         row_nnz = jnp.pad(row_nnz, (0, pad_rows - rows))
     acc = _acc_dtype(values.dtype)
+    record_build("ell", B)
     y = pl.pallas_call(
         _kernel,
-        grid=(pad_rows // T,),
+        grid=(pad_rows // T, b_pad // bt),
         in_specs=[
-            pl.BlockSpec((T, K), lambda i: (i, 0)),
-            pl.BlockSpec((T, K), lambda i: (i, 0)),
-            pl.BlockSpec((T,), lambda i: (i,)),
-            pl.BlockSpec(xm.shape, lambda i: (0, 0)),  # x resident in VMEM
+            pl.BlockSpec((T, K), lambda i, b: (i, 0)),
+            pl.BlockSpec((T, K), lambda i, b: (i, 0)),
+            pl.BlockSpec((T,), lambda i, b: (i,)),
+            pl.BlockSpec((xm.shape[0], bt), lambda i, b: (0, b)),  # x tile
         ],
-        out_specs=pl.BlockSpec((T, B), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((pad_rows, B), acc),
+        out_specs=pl.BlockSpec((T, bt), lambda i, b: (i, b)),
+        out_shape=jax.ShapeDtypeStruct((pad_rows, b_pad), acc),
         interpret=interpret,
     )(colind, values, row_nnz, xm)
-    y = y[:rows]
+    y = y[:rows, :B]
     return y[:, 0] if squeeze else y

@@ -1,0 +1,41 @@
+"""Trace-time instrumentation for the Pallas kernel wrappers.
+
+Every Pallas wrapper (`coo_spmv_pallas`, `ell_spmv_pallas`,
+`bcoo_spmv_pallas`) records one event per *kernel build* — i.e. per Python
+invocation of the wrapper, which under ``jax.jit``/``shard_map`` happens once
+per trace, not once per call.  Tests use this to assert that a given path
+(e.g. the engine's micro-batched SpMM) really dispatched onto the Pallas
+kernels rather than silently falling back to the XLA oracles.
+"""
+from __future__ import annotations
+
+from collections import Counter
+
+__all__ = ["PALLAS_BUILDS", "record_build", "builds", "reset"]
+
+# kind -> number of kernel builds (trace-time wrapper invocations)
+PALLAS_BUILDS: Counter = Counter()
+
+
+def record_build(kind: str, batch: int = 1) -> None:
+    """Record one Pallas kernel build of ``kind`` ("coo", "ell", "bcoo").
+
+    ``batch`` is the number of right-hand sides the build was specialized
+    for; SpMM builds (batch > 1) are additionally counted under
+    ``f"{kind}.spmm"``.
+    """
+    PALLAS_BUILDS[kind] += 1
+    if batch > 1:
+        PALLAS_BUILDS[f"{kind}.spmm"] += 1
+
+
+def builds(kind: str | None = None) -> int:
+    """Total builds recorded (optionally of one ``kind``)."""
+    if kind is not None:
+        return PALLAS_BUILDS[kind]
+    return sum(PALLAS_BUILDS.values())
+
+
+def reset() -> None:
+    """Zero all counters (test isolation)."""
+    PALLAS_BUILDS.clear()

@@ -24,7 +24,8 @@ from .coo_spmv import coo_spmv_pallas, plan_chunks
 from .csr_spmv import csr_plan_chunks, csr_spmv_pallas
 from .ell_spmv import ell_spmv_pallas
 
-__all__ = ["spmv", "spmm", "spmv_local_coo", "spmv_local_block"]
+__all__ = ["spmv", "spmm", "pallas_program", "spmv_local_coo",
+           "spmv_local_block"]
 
 
 def _require_concrete(m) -> None:
@@ -66,53 +67,92 @@ def spmv(m, x: jax.Array, impl: str = "xla", interpret: bool = True) -> jax.Arra
             )
         raise TypeError(type(m))
     if impl == "pallas":
-        import numpy as np
-
-        _require_concrete(m)
-        if isinstance(m, F.CSR):
-            plan = csr_plan_chunks(
-                np.asarray(m.rowptr), np.asarray(m.colind), np.asarray(m.values),
-                m.rows,
-            )
-            return csr_spmv_pallas(plan, x, interpret=interpret)
-        if isinstance(m, F.COO):
-            nnz = int(m.nnz)
-            plan = plan_chunks(
-                np.asarray(m.rowind)[:nnz],
-                np.asarray(m.colind)[:nnz],
-                np.asarray(m.values)[:nnz],
-                m.rows,
-            )
-            return coo_spmv_pallas(plan, x, interpret=interpret)
-        if isinstance(m, F.BCSR):
-            coo = _bcsr_to_bcoo_indices(m)
-            return bcoo_spmv_pallas(
-                coo, m.bcolind, m.bvalues, x, m.rows, m.nblocks, interpret=interpret
-            )
-        if isinstance(m, F.BCOO):
-            return bcoo_spmv_pallas(
-                m.browind, m.bcolind, m.bvalues, x, m.rows, m.nblocks,
-                interpret=interpret,
-            )
-        raise TypeError(type(m))
+        return pallas_program(m, interpret=interpret)(x)
     raise ValueError(f"unknown impl {impl!r}")
+
+
+def pallas_program(m, interpret: bool = True,
+                   batch_tile: int | None = None):
+    """Build the Pallas SpMV/SpMM callable for a container (plan once).
+
+    The host-side preprocessing (chunk planning for COO/CSR, browptr
+    expansion for BCSR) runs exactly once here; the returned callable takes
+    x of shape (cols,) or (cols, B) and runs only the kernel.  This is what
+    ``repro.api``'s SingleDeviceExecutor compiles at build time so repeated
+    ``exe(x)`` / ``exe.batch(X)`` calls pay no per-call planning.
+
+    Args:
+      m: a concrete CSR/COO/BCSR/BCOO container (``core.formats``).
+      interpret: run the kernels in interpret mode (CPU validation).
+      batch_tile: SpMM lane tile override (see the kernel modules).
+
+    Returns:
+      ``f(x) -> y`` with y in the kernel accumulation dtype.
+
+    Raises:
+      ValueError: if ``m`` holds traced arrays (the plan is host-side).
+      TypeError: for an unknown container type.
+    """
+    import numpy as np
+
+    _require_concrete(m)
+    if isinstance(m, F.CSR):
+        plan = csr_plan_chunks(
+            np.asarray(m.rowptr), np.asarray(m.colind), np.asarray(m.values),
+            m.rows,
+        )
+        return partial(csr_spmv_pallas, plan, interpret=interpret,
+                       batch_tile=batch_tile)
+    if isinstance(m, F.COO):
+        nnz = int(m.nnz)
+        plan = plan_chunks(
+            np.asarray(m.rowind)[:nnz],
+            np.asarray(m.colind)[:nnz],
+            np.asarray(m.values)[:nnz],
+            m.rows,
+        )
+        return partial(coo_spmv_pallas, plan, interpret=interpret,
+                       batch_tile=batch_tile)
+    if isinstance(m, (F.BCSR, F.BCOO)):
+        browind = (_bcsr_to_bcoo_indices(m) if isinstance(m, F.BCSR)
+                   else m.browind)
+
+        def run(x):
+            return bcoo_spmv_pallas(
+                browind, m.bcolind, m.bvalues, x, m.rows, m.nblocks,
+                interpret=interpret, batch_tile=batch_tile,
+            )
+
+        return run
+    raise TypeError(type(m))
 
 
 def spmm(m, X: jax.Array, impl: str = "xla", interpret: bool = True) -> jax.Array:
     """Multi-RHS SpMV: Y = m @ X with X of shape (cols, B) -> (rows, B).
 
-    The batch dimension threads through every oracle in kernels/ref.py
-    (their gathers/scatters are written over ``x.shape[1:]``), so this is the
-    same code path the engine's micro-batcher exercises distributed.  The
-    Pallas kernels are single-RHS for now; request them per column instead.
+    For ``impl="xla"`` the batch dimension threads through every oracle in
+    kernels/ref.py (their gathers/scatters are written over ``x.shape[1:]``).
+    For ``impl="pallas"`` each format's kernel runs its lane-tiled SpMM grid
+    (the batch axis becomes a grid dimension; the matrix stream is reused
+    across batch tiles) — the same kernels the engine's micro-batched path
+    compiles, so coalesced requests stay on the Pallas path end to end.
+
+    Args:
+      m: any container format from core/formats.py.
+      X: (cols, B) right-hand sides.
+      impl: "xla" or "pallas" (concrete containers only, like ``spmv``).
+      interpret: Pallas interpret mode (CPU validation).
+
+    Returns:
+      Y (rows, B); for "pallas" in the kernel accumulation dtype.
+
+    Raises:
+      ValueError: if X is not 2D, or the impl is unknown, or impl="pallas"
+        gets a traced container.
     """
     X = jnp.asarray(X)
     if X.ndim != 2:
         raise ValueError(f"spmm expects X of shape (cols, B); got {X.shape}")
-    if impl != "xla":
-        raise NotImplementedError(
-            "spmm is XLA-only; the Pallas kernels take one RHS at a time"
-        )
     return spmv(m, X, impl=impl, interpret=interpret)
 
 

@@ -4,7 +4,8 @@ prints sentinel lines the test asserts on.
 
 Covers the acceptance grid: SparseMatrix -> ExecutionPlan -> Executor
 round-trips for all four container formats x both partitionings x
-{float32, bfloat16} on the 4-device mesh, plus executor batch parity.
+{xla, pallas-interpret} x {float32, bfloat16} on the 4-device mesh, plus
+executor batch (SpMM) parity for every cell.
 """
 import os
 
@@ -40,15 +41,17 @@ def main():
         sm = SparseMatrix.from_dense(a)
         for fmt in ("coo", "csr", "bcoo", "bcsr"):
             for part in ("1d", "2d"):
-                pln = sm.plan(scheme=part, fmt=fmt, devices=jax.devices())
-                assert pln.partitioning == part, pln.describe()
-                exe = pln.compile()
-                y = np.asarray(exe(x), np.float32)
-                Y = np.asarray(exe.batch(X), np.float32)
-                ok = (np.allclose(y, y_ref, **TOL[dtype])
-                      and np.allclose(Y, Y_ref, **TOL[dtype]))
-                print(f"API parity {fmt}.{part}.{dtype}: "
-                      f"{'OK' if ok else 'FAIL'}")
+                for impl in ("xla", "pallas"):
+                    pln = sm.plan(scheme=part, fmt=fmt, impl=impl,
+                                  devices=jax.devices())
+                    assert pln.partitioning == part, pln.describe()
+                    exe = pln.compile()
+                    y = np.asarray(exe(x), np.float32)
+                    Y = np.asarray(exe.batch(X), np.float32)
+                    ok = (np.allclose(y, y_ref, **TOL[dtype])
+                          and np.allclose(Y, Y_ref, **TOL[dtype]))
+                    print(f"API parity {fmt}.{part}.{impl}.{dtype}: "
+                          f"{'OK' if ok else 'FAIL'}")
     print("API DONE")
 
 

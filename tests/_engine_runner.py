@@ -83,6 +83,24 @@ def main():
     )
     print(f"ENGINE batcher: {'OK' if ok else 'FAIL'}")
 
+    # Pallas tile kernels under shard_map: the micro-batched SpMM runs the
+    # lane-tiled kernels on 1D and 2D meshes (tentpole acceptance)
+    from repro.kernels import instrument
+
+    a = mats["regular"]
+    for part in ("1d", "2d"):
+        name = f"pallas.{part}"
+        eng.register(name, a, partitioning=part, impl="pallas")
+        assert eng.plan_for(name).impl == "pallas"
+        before = instrument.builds()
+        futs = [mb.submit(name, v[: a.shape[1]]) for v in vecs[:4]]
+        mb.flush()
+        ok = all(
+            np.allclose(f.result(), a @ v[: a.shape[1]], rtol=1e-3, atol=1e-4)
+            for f, v in zip(futs, vecs)
+        ) and instrument.builds() > before
+        print(f"ENGINE pallas batch {part}: {'OK' if ok else 'FAIL'}")
+
     print("ENGINE DONE")
 
 

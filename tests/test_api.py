@@ -150,12 +150,24 @@ def test_plan_errors():
         sm.plan(scheme="3d")
     with pytest.raises(ValueError, match="unknown impl"):
         sm.plan(impl="cuda")
-    with pytest.raises(ValueError, match="single-device"):
-        sm.plan(impl="pallas", devices=jax.devices())
     with pytest.raises(ValueError, match="not both"):
         sm.plan(mesh=object(), devices=jax.devices())
     with pytest.raises(ValueError, match="shard_map program"):
         sm.plan().program()
+
+
+def test_pallas_composes_with_distributed_plans():
+    # the Pallas kernels run as the per-shard tile kernel inside shard_map
+    a = _mat("float32")
+    sm = SparseMatrix.from_dense(a)
+    pln = sm.plan(fmt="coo", impl="pallas", devices=jax.devices())
+    assert pln.impl == "pallas" and pln.is_distributed
+    exe = pln.compile()
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal(a.shape[1]).astype(np.float32)
+    X = rng.standard_normal((a.shape[1], 3)).astype(np.float32)
+    np.testing.assert_allclose(exe(x), a @ x, **TOL["float32"])
+    np.testing.assert_allclose(exe.batch(X), a @ X, **TOL["float32"])
 
 
 # ------------------------------------------------- pallas trace boundary
@@ -223,6 +235,7 @@ def test_api_multi_device_all_ok(api_dist_output):
 
 @pytest.mark.parametrize("fmt", ["coo", "csr", "bcoo", "bcsr"])
 @pytest.mark.parametrize("part", ["1d", "2d"])
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
 @pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
-def test_api_distributed_parity(api_dist_output, fmt, part, dtype):
-    assert f"API parity {fmt}.{part}.{dtype}: OK" in api_dist_output
+def test_api_distributed_parity(api_dist_output, fmt, part, impl, dtype):
+    assert f"API parity {fmt}.{part}.{impl}.{dtype}: OK" in api_dist_output

@@ -320,6 +320,50 @@ def test_batcher_delivers_failures(engine):
         fut.result(timeout=5)
 
 
+def test_microbatched_path_uses_pallas_spmm():
+    """register(impl="pallas") routes the coalesced SpMM onto the Pallas
+    kernels: the batched multiply specializes a multi-RHS kernel build."""
+    from repro.kernels import instrument
+
+    a = _mats()["scale-free"]  # coo-family plan -> chunked windowed kernel
+    eng = SpmvEngine(cache_capacity=2, impl="pallas")
+    eng.register("m", a)
+    cp = eng.plan_for("m")
+    assert cp.impl == "pallas"
+    assert cp.key[-1] == "pallas"  # impl is part of the cache identity
+    mb = MicroBatcher(eng, max_batch=4, buckets=(1, 2, 4))
+    rng = np.random.default_rng(6)
+    vecs = [rng.standard_normal(a.shape[1]).astype(np.float32)
+            for _ in range(4)]
+    before = instrument.builds("coo.spmm")
+    futs = [mb.submit("m", v) for v in vecs]  # max_batch -> one SpMM flush
+    for f, v in zip(futs, vecs):
+        np.testing.assert_allclose(f.result(), a @ v, rtol=1e-3, atol=1e-4)
+    # the batched shape traced a multi-RHS (SpMM) Pallas kernel build
+    assert instrument.builds("coo.spmm") > before
+    assert mb.batches_run == 1 and mb.vectors_run == 4
+
+
+def test_engine_impl_validation():
+    with pytest.raises(ValueError, match="unknown impl"):
+        SpmvEngine(impl="cuda")
+    eng = SpmvEngine()
+    with pytest.raises(ValueError, match="unknown impl"):
+        eng.register("m", _mats()["regular"], impl="cuda")
+
+
+def test_same_matrix_xla_and_pallas_are_separate_cache_entries(engine):
+    a = _mats()["regular"]
+    engine.register("mx", a, impl="xla")
+    engine.register("mp", a, impl="pallas")
+    kx = engine.registry.get("mx").cache_key
+    kp = engine.registry.get("mp").cache_key
+    assert kx != kp and kx[:-1] == kp[:-1]
+    x = np.random.default_rng(7).standard_normal(a.shape[1]).astype(np.float32)
+    np.testing.assert_allclose(engine.multiply("mx", x),
+                               engine.multiply("mp", x), rtol=1e-4, atol=1e-5)
+
+
 # ---------------------------------------------------------------- telemetry
 
 
@@ -369,6 +413,7 @@ def test_engine_multi_device_all_ok(engine_dist_output):
     "ENGINE variable-sized odd-width: OK",
     "ENGINE steady-state zero-retrace: OK",
     "ENGINE batcher: OK",
+    "ENGINE pallas batch 1d: OK", "ENGINE pallas batch 2d: OK",
 ])
 def test_engine_scheme(engine_dist_output, line):
     assert line in engine_dist_output

@@ -1,0 +1,92 @@
+#!/usr/bin/env python
+"""Documentation link + symbol checker (CI docs job).
+
+Walks README.md and docs/*.md and fails if
+
+  * a relative markdown link ``[text](path)`` points at a file or directory
+    that does not exist (anchors and absolute URLs are skipped), or
+  * a backticked dotted symbol starting with ``repro.`` does not resolve to
+    an importable module / attribute chain.
+
+This keeps the documented snippets from rotting: a renamed module, a moved
+example or a deleted doc breaks the docs job, not a future reader.
+
+    PYTHONPATH=src python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import importlib
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SYMBOL_RE = re.compile(r"`(repro(?:\.\w+)+)`")
+
+
+def check_links(md: Path) -> list[str]:
+    errors = []
+    for target in LINK_RE.findall(md.read_text()):
+        if target.startswith(("http://", "https://", "#", "mailto:")):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        resolved = (md.parent / path).resolve()
+        if not resolved.exists():
+            errors.append(f"{md.relative_to(ROOT)}: broken link -> {target}")
+    return errors
+
+
+def resolve_symbol(dotted: str) -> bool:
+    """Import the longest module prefix, then getattr the rest."""
+    parts = dotted.split(".")
+    for cut in range(len(parts), 0, -1):
+        try:
+            obj = importlib.import_module(".".join(parts[:cut]))
+        except ImportError:
+            continue
+        try:
+            for attr in parts[cut:]:
+                obj = getattr(obj, attr)
+        except AttributeError:
+            return False
+        return True
+    return False
+
+
+def check_symbols(md: Path) -> list[str]:
+    errors = []
+    for dotted in sorted(set(SYMBOL_RE.findall(md.read_text()))):
+        if not resolve_symbol(dotted):
+            errors.append(
+                f"{md.relative_to(ROOT)}: unresolvable symbol `{dotted}`"
+            )
+    return errors
+
+
+def main() -> int:
+    docs = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+    missing = [d for d in docs if not d.exists()]
+    if missing:
+        print(f"missing doc files: {[str(m) for m in missing]}")
+        return 1
+    errors = []
+    n_links = n_syms = 0
+    for md in docs:
+        n_links += len(LINK_RE.findall(md.read_text()))
+        n_syms += len(set(SYMBOL_RE.findall(md.read_text())))
+        errors += check_links(md)
+        errors += check_symbols(md)
+    for e in errors:
+        print(f"ERROR: {e}")
+    print(f"checked {len(docs)} files, {n_links} links, "
+          f"{n_syms} repro.* symbols: "
+          f"{'FAIL' if errors else 'OK'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
