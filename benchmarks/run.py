@@ -1,6 +1,7 @@
 """Benchmark harness — one module per paper table/figure family.
 
     PYTHONPATH=src python -m benchmarks.run [--scale N] [--quick] [--smoke]
+                                            [--tune] [--json PATH]
 
 Prints ``name,us_per_call,derived`` CSV rows (one block per figure).
 Mapping to the paper:
@@ -15,8 +16,20 @@ Mapping to the paper:
 ``--smoke`` is the CI wiring check: imports every benchmark module, runs the
 single-core block on the Table-3 miniatures and one tiny api-routed
 distributed matrix, all on CPU in a few minutes.
+
+``--json PATH`` additionally writes the emitted CSV rows as machine-readable
+JSON — the file CI uploads as an artifact and ``tools/check_bench.py``
+compares against the committed ``BENCH_smoke.json`` baseline, so the perf
+trajectory is recorded instead of scrolling away in logs.
+
+``--tune`` runs the measure-and-refine loop (``repro.tune``) over the paper
+suite instead of the figure blocks and writes ``BENCH_autotune.json``
+(per matrix: the analytic pick, the measured-best pick, and the speedup).
 """
 import argparse
+import contextlib
+import io
+import json
 import os
 import subprocess
 import sys
@@ -87,6 +100,108 @@ def _smoke() -> None:
     print("# smoke OK")
 
 
+class _Tee(io.TextIOBase):
+    """Mirror writes to the real stdout while keeping a copy for --json."""
+
+    def __init__(self, real, copy):
+        self.real, self.copy = real, copy
+
+    def write(self, s):
+        self.copy.write(s)
+        return self.real.write(s)
+
+    def flush(self):
+        self.real.flush()
+
+
+def _parse_rows(text: str) -> list:
+    """``name,us_per_call,derived`` CSV lines -> row dicts (comments and the
+    header are skipped; derived may itself contain commas)."""
+    rows = []
+    for line in text.splitlines():
+        line = line.strip()
+        if not line or line.startswith("#") or line.startswith("name,"):
+            continue
+        parts = line.split(",", 2)
+        if len(parts) < 2:
+            continue
+        try:
+            us = float(parts[1])
+        except ValueError:
+            continue
+        rows.append({
+            "name": parts[0],
+            "us_per_call": us,
+            "derived": parts[2] if len(parts) > 2 else "",
+        })
+    return rows
+
+
+def _write_json(path: str, mode: str, rows: list, extra: dict = None) -> None:
+    doc = {"version": 1, "mode": mode, "rows": rows}
+    if extra:
+        doc.update(extra)
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump(doc, fh, indent=2, sort_keys=True)
+    print(f"# wrote {path} ({len(rows)} rows)", file=sys.stderr)
+
+
+def _tune_block(smoke: bool, json_path: str) -> None:
+    """Measure-and-refine over the paper suite -> BENCH_autotune.json.
+
+    Per matrix: the analytic ``scheme="auto"`` pick and the measured-best
+    ``scheme="tune"`` pick, both with measured wall times, plus the speedup
+    — the machine-readable proof that the tuner never does worse than the
+    analytic model on this machine.
+    """
+    from repro.api import SparseMatrix
+    from repro.data import paper_small_suite
+    from repro.tune import Measurer, Tuner
+
+    from .common import row
+
+    specs = paper_small_suite(1)
+    if smoke:
+        specs = specs[:2]
+    measurer = Measurer(warmup=1, iters=3) if smoke else Measurer()
+    print("name,us_per_call,derived")
+    print("# --- autotune: analytic pick vs measured winner (repro.tune)")
+    results = []
+    for spec in specs:
+        sm = SparseMatrix.from_dense(spec.build())
+        tuner = Tuner(measurer=measurer)
+        res = tuner.tune(sm)
+        best, base = res.best_measurement, res.baseline
+        row(f"tune.{spec.name}.analytic.{base.scheme_id}",
+            base.mean_s * 1e6, "analytic pick")
+        row(f"tune.{spec.name}.tuned.{best.scheme_id}",
+            best.mean_s * 1e6, f"speedup={res.speedup:.2f}x")
+        results.append({
+            "matrix": spec.name,
+            "shape": list(sm.shape),
+            "nnz": sm.nnz,
+            "analytic": {
+                "scheme_id": base.scheme_id,
+                "mean_us": base.mean_s * 1e6,
+            },
+            "tuned": {
+                "scheme_id": best.scheme_id,
+                "impl": best.impl,
+                "grid": list(best.grid),
+                "mean_us": best.mean_s * 1e6,
+                "compile_s": best.compile_s,
+            },
+            "speedup": res.speedup,
+            "candidates": len(res.measurements),
+        })
+        assert best.mean_s <= base.mean_s, (
+            f"tuned pick slower than the measured analytic pick on "
+            f"{spec.name} — the argmin is broken"
+        )
+    _write_json(json_path, "tune", results)
+    print("# tune OK")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=int, default=1)
@@ -94,10 +209,26 @@ def main() -> None:
                     help="skip the slower distributed block")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny-shape CPU wiring check (CI)")
+    ap.add_argument("--tune", action="store_true",
+                    help="run the repro.tune measure-and-refine loop and "
+                         "write BENCH_autotune.json")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the CSV rows as machine-readable JSON "
+                         "(the CI perf artifact)")
     args = ap.parse_args()
 
+    if args.tune:
+        _tune_block(args.smoke, args.json or "BENCH_autotune.json")
+        return
+
     if args.smoke:
-        _smoke()
+        if args.json:
+            copy = io.StringIO()
+            with contextlib.redirect_stdout(_Tee(sys.stdout, copy)):
+                _smoke()
+            _write_json(args.json, "smoke", _parse_rows(copy.getvalue()))
+        else:
+            _smoke()
         return
 
     from . import fig9_single_core, fig11_16_1d, fig17_24_2d, fig25_29_compare

@@ -28,7 +28,6 @@ from __future__ import annotations
 import re
 from dataclasses import dataclass, field
 
-import numpy as np
 
 from repro import compat
 from repro.configs.base import SHAPES, ArchConfig

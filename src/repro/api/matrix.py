@@ -268,12 +268,17 @@ class SparseMatrix:
         block: Tuple[int, int] = (8, 16),
         interpret: bool = True,
         fit: bool = True,
+        tuner=None,
+        tune_cache=None,
+        batch: Optional[int] = None,
     ) -> ExecutionPlan:
         """Resolve scheme + placement into an inspectable ExecutionPlan.
 
         Args:
-          scheme: "auto" (paper Rec. #3 rules fitted to the pool), a string
-            like "1d.nnz" / "2d.equally-sized", or an explicit adaptive.Plan.
+          scheme: "auto" (paper Rec. #3 rules fitted to the pool), "tune"
+            (measure candidates with :mod:`repro.tune` and return the
+            empirically fastest), a string like "1d.nnz" /
+            "2d.equally-sized", or an explicit adaptive.Plan.
           impl: "xla" (the jnp oracles; lower on every backend) or "pallas"
             (the TPU kernels; ``interpret=True`` validates them on CPU).
             Both compose with ``mesh=``/``devices=``: distributed plans run
@@ -288,10 +293,21 @@ class SparseMatrix:
           fit: False inspects the paper plan for ``hw`` as-is, without
             fitting its grid to this pool (not compilable unless the pool
             happens to match).
+          tuner: ``scheme="tune"`` only — a :class:`repro.tune.Tuner`
+            override (bring your own generator/measurer/cache); the default
+            tuner measures xla candidates of the requested ``impl`` with an
+            in-memory cache.
+          tune_cache: ``scheme="tune"`` only — a
+            :class:`repro.tune.TuningCache` (or a path for one) so winners
+            persist across processes; ignored when ``tuner`` is given.
+          batch: ``scheme="tune"`` only — representative SpMM width B the
+            candidates are measured at (part of the tuning-cache key).
 
         Returns:
           An inspectable :class:`~repro.api.plan.ExecutionPlan`; call
-          ``.compile()`` on it for an Executor.
+          ``.compile()`` on it for an Executor.  For ``scheme="tune"`` the
+          plan's ``measured`` dict (and ``describe()``) carry the measured
+          winner-vs-analytic numbers.
 
         Raises:
           ValueError: unknown impl/scheme, both mesh= and devices= given, or
@@ -301,6 +317,31 @@ class SparseMatrix:
             raise ValueError(f"unknown impl {impl!r}: 'xla' or 'pallas'")
         if mesh is not None and devices is not None:
             raise ValueError("pass mesh= or devices=, not both")
+        if scheme == "tune":
+            # measure-and-refine: delegate to repro.tune (lazy import — the
+            # tuner itself plans through this very method)
+            overrides = dict(partitioning=partitioning, fmt=fmt, merge=merge,
+                             grid=grid)
+            forced = [k for k, v in overrides.items() if v is not None]
+            if forced:
+                raise ValueError(
+                    f"scheme='tune' searches {forced} itself; either drop "
+                    "the override or constrain the search with a custom "
+                    "tuner= (repro.tune.Tuner / CandidateGenerator)"
+                )
+            from repro.tune import CandidateGenerator, Tuner, TuningCache
+
+            if tuner is None:
+                cache = tune_cache
+                if cache is not None and not isinstance(cache, TuningCache):
+                    cache = TuningCache(path=cache)
+                tuner = Tuner(
+                    generator=CandidateGenerator(impls=(impl,)), cache=cache
+                )
+            return tuner.tune(
+                self, devices=devices, mesh=mesh, block=block, hw=hw,
+                interpret=interpret, batch=batch,
+            ).best
         distributed = mesh is not None or devices is not None
         if mesh is not None:
             mesh_shape = tuple(mesh.devices.shape)

@@ -196,6 +196,7 @@ class ExecutionPlan:
     part: Optional[PartitionedMatrix] = None  # prebuilt partition (optional)
     ring: bool = False  # 1D ring schedule (requires bucketed part)
     ring_counts: Optional[np.ndarray] = None
+    measured: dict = field(default_factory=dict)  # repro.tune measured truth
 
     # -- inspection --------------------------------------------------------
 
@@ -222,9 +223,7 @@ class ExecutionPlan:
     @property
     def scheme_id(self) -> str:
         """Stable scheme identity (part of the engine's plan-cache key)."""
-        s = self.scheme
-        tag = f"{s.partitioning}.{s.scheme}.{s.fmt}.{s.merge}"
-        return tag + (".ring" if self.ring else "")
+        return self.scheme.tag + (".ring" if self.ring else "")
 
     def describe(self) -> str:
         """Human-readable one-plan summary (scheme, impl, placement, reason,
@@ -246,6 +245,18 @@ class ExecutionPlan:
         if self.estimate:
             est = ", ".join(f"{k}={v:.2e}" for k, v in self.estimate.items())
             lines.append(f"  model estimate: {est}")
+        if self.measured:
+            m = self.measured
+            line = f"  measured: {m['mean_s']:.2e}s/call"
+            if m.get("candidates"):
+                line += f" over {m['candidates']} candidates"
+            if m.get("from_cache"):
+                line += " (TuningCache hit)"
+            base = m.get("baseline_mean_s")
+            if base is not None:
+                line += (f"; analytic pick {m.get('baseline_scheme_id')} "
+                         f"measured {base:.2e}s ({m.get('speedup', 1.0):.2f}x)")
+            lines.append(line)
         return "\n".join(lines)
 
     # -- axes / specs ------------------------------------------------------

@@ -13,7 +13,7 @@ the family topology (same pattern, tiny dims) — used by tests/test_archs.py.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Callable, Dict, Tuple
 
 __all__ = ["ArchConfig", "register", "get_config", "list_configs", "SHAPES"]
@@ -138,8 +138,11 @@ class ArchConfig:
             + self.n_heads * self.head_dim * d
         )
         mlp = 3 * d * f * self.ffn_density
-        moe = 3 * d * self.moe_d_ff * (self.n_experts + self.n_shared_experts) + d * self.n_experts
-        ssm = d * 2 * self.ssm_d_inner + d * 2 * self.ssm_state * self.ssm_heads + d * self.ssm_heads + self.ssm_d_inner * d
+        moe = (3 * d * self.moe_d_ff * (self.n_experts + self.n_shared_experts)
+               + d * self.n_experts)
+        ssm = (d * 2 * self.ssm_d_inner
+               + d * 2 * self.ssm_state * self.ssm_heads
+               + d * self.ssm_heads + self.ssm_d_inner * d)
         mlstm = 6 * d * d
         slstm = 4 * d * d + 4 * d * (d // max(self.n_heads, 1)) + d * d
         kinds = {
@@ -203,7 +206,8 @@ class ArchConfig:
             ssm_heads=min(self.ssm_heads, 4) if self.ssm_heads else 0,
             ssm_d_inner=128 if self.ssm_d_inner else 0,
             encoder_layers=min(self.encoder_layers, 2),
-            sliding_window=min(self.sliding_window, 16) if self.sliding_window else None,
+            sliding_window=(min(self.sliding_window, 16)
+                            if self.sliding_window else None),
             modality_tokens=min(self.modality_tokens, 8),
         )
 

@@ -7,7 +7,7 @@ its 26 matrices) and the SpMV production-mesh dry-run
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from repro.data import MatrixSpec, paper_large_suite, paper_small_suite
 

@@ -27,7 +27,13 @@ from dataclasses import dataclass
 
 from .stats import MatrixStats
 
-__all__ = ["Plan", "HardwareModel", "select_scheme", "estimate_time"]
+__all__ = [
+    "Plan",
+    "HardwareModel",
+    "select_scheme",
+    "enumerate_schemes",
+    "estimate_time",
+]
 
 
 @dataclass(frozen=True)
@@ -52,6 +58,13 @@ class Plan:
     merge: str  # none | ppermute | psum | psum_scatter | global
     grid: tuple  # (R, C) or (P, 1)
     reason: str
+
+    @property
+    def tag(self) -> str:
+        """Canonical ``partitioning.scheme.fmt.merge`` identity string —
+        the base of ``ExecutionPlan.scheme_id`` and of the engine's
+        PlanKey (which both append execution-level suffixes/fields)."""
+        return f"{self.partitioning}.{self.scheme}.{self.fmt}.{self.merge}"
 
 
 def select_scheme(
@@ -112,6 +125,79 @@ def _pick_vertical_partitions(
             best_c, best_t = c, t
         c *= 2
     return best_c
+
+
+def enumerate_schemes(
+    stats: MatrixStats,
+    hw: HardwareModel,
+    dtype_bytes: int = 4,
+    include_exotic: bool = False,
+) -> list:
+    """Plausible candidate Plans for empirical tuning, analytic pick first.
+
+    The analytic rules above pick ONE scheme per matrix; the DAMOV-style
+    characterization work shows such models systematically mispredict on
+    real hardware, so ``repro.tune`` measures a shortlist instead of
+    trusting the model.  This is that shortlist: the :func:`select_scheme`
+    pick, then the format/partitioning/balancing alternates the paper's
+    evaluation shows winning on *some* matrix class, ranked by the analytic
+    :func:`estimate_time` (cheapest-looking first, so a truncated search
+    still measures the likely winners).
+
+    ``include_exotic`` adds the 2D equally-wide / variable-sized schemes,
+    which the analytic rules never auto-select on TPU (Obs. 14) but which a
+    measured search may legitimately try.
+
+    Returns:
+      Deduplicated list of Plans; ``[0]`` is always the analytic pick.
+    """
+    chips = hw.chips
+    pick = select_scheme(stats, hw, dtype_bytes)
+    fmts = ["coo", "csr"]
+    if stats.is_block_pattern or stats.block_fill >= 0.25:
+        fmts += ["bcoo", "bcsr"]
+    cands = []
+    for fmt in fmts:
+        balances = ("nnz", "rows") if fmt in ("coo", "bcoo") else ("nnz-rgrn", "rows")
+        for balance in balances:
+            cands.append(
+                Plan("1d", balance, fmt, "ppermute", (chips, 1),
+                     f"tuning candidate: 1D {balance} balance, {fmt}")
+            )
+        if chips > 1:
+            cands.append(
+                Plan("2d", "equally-sized", fmt, "psum_scatter", (),
+                     f"tuning candidate: 2D equally-sized tiles, {fmt}")
+            )
+            if include_exotic:
+                cands.append(
+                    Plan("2d", "equally-wide", fmt, "global", (),
+                         f"tuning candidate: 2D equally-wide, {fmt}")
+                )
+                cands.append(
+                    Plan("2d", "variable-sized", fmt, "global", (),
+                         f"tuning candidate: 2D variable-sized, {fmt}")
+                )
+
+    def _key(p: Plan) -> tuple:
+        return (p.partitioning, p.scheme, p.fmt, p.merge)
+
+    def _cost(p: Plan) -> float:
+        grid = p.grid if p.grid else (chips, 1)
+        try:
+            est = estimate_time(stats, Plan(p.partitioning, p.scheme, p.fmt,
+                                            p.merge, grid, p.reason),
+                                hw, dtype_bytes)
+        except Exception:
+            return float("inf")
+        return sum(est.values())
+
+    out, seen = [pick], {_key(pick)}
+    for p in sorted(cands, key=_cost):
+        if _key(p) not in seen:
+            seen.add(_key(p))
+            out.append(p)
+    return out
 
 
 def estimate_time(

@@ -514,7 +514,7 @@ def spmv_2d(
             f"(got {mat.shape[1]} % {C})"
         )
     if aligned and mat.shape[0] % R != 0:
-        raise ValueError(f"equally-sized needs rows % R == 0")
+        raise ValueError("equally-sized needs rows % R == 0")
     rows_pad = mat.h_pad * R if aligned else -(-mat.shape[0] // 8) * 8
     local = _local_kernel(mat, impl, interpret)
 
@@ -534,7 +534,8 @@ def spmv_2d(
             x_loc = x_shard
             if x_loc.shape[0] < mat.w_pad:
                 x_loc = jnp.pad(
-                    x_loc, ((0, mat.w_pad - x_loc.shape[0]),) + ((0, 0),) * (x_loc.ndim - 1)
+                    x_loc,
+                    ((0, mat.w_pad - x_loc.shape[0]),) + ((0, 0),) * (x_loc.ndim - 1),
                 )
         y = local(sl, x_loc)  # (h_pad[, B])
         if merge == "psum":

@@ -19,8 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from functools import partial
-from typing import Any, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -30,7 +30,7 @@ with a leading device axis ready for ``jax.device_put`` + ``shard_map``.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

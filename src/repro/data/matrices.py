@@ -130,7 +130,8 @@ def paper_large_suite(scale: int = 1) -> list[MatrixSpec]:
         MatrixSpec("parabolic_fem", "regular", 2048 * s, 2048 * s, 7, seed=3),
         MatrixSpec("roadNet-TX", "regular", 2048 * s, 2048 * s, 3, seed=4),
         MatrixSpec("rajat31", "regular", 2048 * s, 2048 * s, 4, seed=5),
-        MatrixSpec("af_shell1", "block", 2048 * s, 2048 * s, block_density=0.15, seed=6),
+        MatrixSpec("af_shell1", "block", 2048 * s, 2048 * s,
+                   block_density=0.15, seed=6),
         MatrixSpec("delaunay_n19", "regular", 2048 * s, 2048 * s, 6, seed=7),
         MatrixSpec("thermomech_dK", "regular", 2048 * s, 2048 * s, 14, seed=8),
         MatrixSpec("memchip", "regular", 2048 * s, 2048 * s, 5, seed=9),

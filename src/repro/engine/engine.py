@@ -17,6 +17,7 @@ same ``repro.api.fit_plan`` rules every other entry point uses.
 """
 from __future__ import annotations
 
+import threading
 import time
 from typing import Optional, Tuple
 
@@ -27,11 +28,7 @@ from repro.api import AXES_2D, AXIS_1D, SparseMatrix, resolve_scheme
 from repro.api.plan import fit_plan
 from repro.core.adaptive import HardwareModel, Plan
 from repro.engine.plan_cache import CompiledPlan, PlanCache, PlanKey
-from repro.engine.registry import (
-    MatrixRegistry,
-    RegisteredMatrix,
-    fingerprint_matrix,
-)
+from repro.engine.registry import MatrixRegistry, RegisteredMatrix
 from repro.engine.telemetry import RequestRecord, Telemetry
 
 __all__ = ["SpmvEngine"]
@@ -51,6 +48,10 @@ class SpmvEngine:
         block: Tuple[int, int] = (8, 16),
         hw: Optional[HardwareModel] = None,
         impl: str = "xla",
+        tune: bool = False,
+        tuner=None,
+        tune_after: int = 8,
+        tune_margin: float = 0.9,
     ) -> None:
         """Create a serving engine over a device pool.
 
@@ -64,14 +65,27 @@ class SpmvEngine:
           impl: default local tile kernel for registered matrices — "xla"
             (oracles) or "pallas" (TPU kernels; interpret mode off-TPU).
             ``register(..., impl=...)`` overrides per matrix.
+          tune: measure-and-refine plans in the background off live traffic
+            (:mod:`repro.tune`): once a matrix has served ``tune_after``
+            vectors, candidates are measured on its most recent input and
+            the cached executor is atomically swapped when the winner beats
+            the incumbent by the ``tune_margin`` factor.
+          tuner: a :class:`repro.tune.Tuner` override (e.g. a persistent
+            TuningCache, or a FakeMeasurer in tests).
+          tune_after: vectors a matrix must serve before refinement starts.
+          tune_margin: swap only when measured best < incumbent * margin
+            (guards against measurement-noise flapping).
 
         Raises:
-          ValueError: for an unknown ``impl``.
+          ValueError: for an unknown ``impl`` or a ``tune_margin`` outside
+            (0, 1].
         """
         import jax
 
         if impl not in ("xla", "pallas"):
             raise ValueError(f"unknown impl {impl!r}: 'xla' or 'pallas'")
+        if not 0.0 < tune_margin <= 1.0:
+            raise ValueError(f"tune_margin must be in (0, 1]; got {tune_margin}")
         self.impl = impl
         self.devices = list(devices) if devices is not None else jax.devices()
         self.cache = PlanCache(cache_capacity)
@@ -81,6 +95,14 @@ class SpmvEngine:
         self.hw = hw if hw is not None else HardwareModel(chips=len(self.devices))
         self.partition_count = 0  # host preprocessing runs (cache misses)
         self._meshes: dict = {}
+        self.tune = tune
+        self.tune_after = tune_after
+        self.tune_margin = tune_margin
+        self._tuner = tuner
+        self.tune_events: list = []  # refinement outcomes, append-only
+        self._swap_lock = threading.Lock()  # registry/cache swap atomicity
+        self._tuning: set = set()  # names with a refinement in flight
+        self._tune_threads: list = []
 
     # ------------------------------------------------------------------ mesh
 
@@ -186,13 +208,15 @@ class SpmvEngine:
             hw=self.hw, partitioning=partitioning, block=self.block,
         )
         fp = sm.fingerprint()
-        scheme_id = f"{plan.partitioning}.{plan.scheme}.{plan.fmt}.{plan.merge}"
+        scheme_id = plan.tag
         key: PlanKey = (fp, tuple(plan.grid), np.dtype(a.dtype).str, scheme_id,
                         impl)
-        compiled = self.cache.get(key)
+        with self._swap_lock:
+            compiled = self.cache.get(key)
         if compiled is None:
             compiled = self._build(sm, plan, key, impl)
-            self.cache.put(compiled)
+            with self._swap_lock:
+                self.cache.put(compiled)
         entry = RegisteredMatrix(
             name=name,
             fingerprint=fp,
@@ -201,6 +225,7 @@ class SpmvEngine:
             stats=sm.stats,
             plan=compiled.plan,
             cache_key=key,
+            matrix=sm,  # host-side; lets the background tuner re-plan
         )
         # overwriting a name must not strand the old plan in the cache
         old = self.registry.find(name)
@@ -208,13 +233,17 @@ class SpmvEngine:
         if old is not None and old.cache_key != key and not any(
             e.cache_key == old.cache_key for e in self.registry
         ):
-            self.cache.evict(old.cache_key)
+            with self._swap_lock:
+                self.cache.evict(old.cache_key)
         if warmup:
             compiled.executor.warmup()
         return entry
 
     def _compiled(self, entry: RegisteredMatrix) -> CompiledPlan:
-        compiled = self.cache.get(entry.cache_key)
+        # lock: the background refine thread mutates the cache (put can
+        # LRU-evict), and OrderedDict move_to_end racing popitem corrupts
+        with self._swap_lock:
+            compiled = self.cache.get(entry.cache_key)
         if compiled is None:
             raise RuntimeError(
                 f"plan for {entry.name!r} was evicted from the cache; "
@@ -268,7 +297,173 @@ class SpmvEngine:
             cache_hit=warm,
             traced=cp.trace_count > traces_before,
         ))
+        if self.tune and not entry.tuned:
+            self._maybe_refine(entry, x)
         return y
+
+    # --------------------------------------------------- measure-and-refine
+
+    def _make_tuner(self):
+        """Default background tuner: same-impl candidates, in-memory cache."""
+        if self._tuner is None:
+            from repro.tune import CandidateGenerator, Measurer, Tuner
+
+            self._tuner = Tuner(
+                generator=CandidateGenerator(impls=(self.impl,)),
+                measurer=Measurer(warmup=1, iters=3),
+            )
+        return self._tuner
+
+    def _maybe_refine(self, entry: RegisteredMatrix, x) -> None:
+        """Kick one background refinement per entry once traffic qualifies."""
+        if entry.tuned or entry.requests < self.tune_after \
+                or entry.name in self._tuning:  # unlocked fast path
+            return
+        thread = threading.Thread(
+            target=self._refine_bg, args=(entry.name,),
+            name=f"spmv-tune-{entry.name}", daemon=True,
+        )
+        with self._swap_lock:
+            if entry.name in self._tuning or entry.tuned:
+                return
+            self._tuning.add(entry.name)
+            # prune+append under the lock: concurrent triggers must not
+            # lose a live thread reference (drain_tuning joins these)
+            self._tune_threads = [
+                t for t in self._tune_threads if t.is_alive()
+            ] + [thread]
+        # snapshot the triggering request only — not every request in
+        # flight while the (possibly long) refinement runs
+        entry.last_x = np.array(x)
+        thread.start()
+
+    def _refine_bg(self, name: str) -> None:
+        try:
+            self.refine(name)
+        except Exception as e:  # background thread: record, never propagate
+            self.tune_events.append({
+                "name": name, "swapped": False,
+                "error": f"{type(e).__name__}: {e}",
+            })
+            # one shot per entry, success or not: a persistently failing
+            # refinement must not re-spawn (and re-compile every candidate)
+            # on each subsequent request
+            entry = self.registry.find(name)
+            if entry is not None:
+                entry.tuned = True
+        finally:
+            self._tuning.discard(name)
+
+    def refine(self, name: str, x=None) -> dict:
+        """Measure candidate plans for ``name`` and swap in a faster one.
+
+        The incumbent plan is always among the measured candidates, so the
+        decision is apples-to-apples on the same representative input: the
+        most recent live vector (``entry.last_x``), or ``x`` when given, or
+        the tuner's seeded synthetic input.  The executor swap is atomic
+        with respect to :meth:`multiply`'s plan lookup — a request resolves
+        either the old plan or the new one — and the superseded plan is
+        evicted (device arrays freed) unless another registered name still
+        shares it.  A request already mid-flight on the old executor when
+        the swap lands hits the cache's documented eviction contract
+        (deleted-array error; see :meth:`CompiledPlan.release`).
+
+        Args:
+          name: a registered matrix.
+          x: representative input override, (cols,) or (cols, B).
+
+        Returns:
+          The tune event dict (also appended to ``self.tune_events``):
+          winner/incumbent scheme ids, measured times, whether it swapped.
+
+        Raises:
+          KeyError: unknown ``name``.
+          RuntimeError: the entry was registered by a pre-tune engine and
+            carries no matrix to re-plan from.
+        """
+        entry = self.registry.get(name)
+        if entry.matrix is None:
+            raise RuntimeError(
+                f"{name!r} has no host-side SparseMatrix to tune from"
+            )
+        if x is None:
+            x = entry.last_x
+        batch = None
+        if x is not None and getattr(x, "ndim", 1) == 2:
+            batch = int(x.shape[1])
+        tuner = self._make_tuner()
+        result = tuner.tune(
+            entry.matrix,
+            devices=self.devices,
+            block=self.block,
+            hw=self.hw,
+            batch=batch,
+            x=x,
+            baseline=(entry.plan, entry.cache_key[4]),
+        )
+        best, incumbent = result.best_measurement, result.baseline
+        event = {
+            "name": name,
+            "incumbent": incumbent.scheme_id,
+            "incumbent_s": incumbent.mean_s,
+            "winner": best.scheme_id,
+            "winner_impl": result.best.impl,
+            "winner_s": best.mean_s,
+            "speedup": result.speedup,
+            "from_cache": result.from_cache,
+            "swapped": False,
+        }
+        plan, impl = result.best.scheme, result.best.impl
+        scheme_id = plan.tag
+        key: PlanKey = (entry.fingerprint, tuple(plan.grid),
+                        entry.dtype, scheme_id, impl)
+        beats = best.mean_s < incumbent.mean_s * self.tune_margin
+        if key != entry.cache_key and beats:
+            # fast path: the winner is already compiled — swap under ONE
+            # lock acquisition so the peeked plan cannot be evicted (and
+            # released) between the lookup and the swap
+            with self._swap_lock:
+                if self.cache.peek(key) is not None:
+                    self.cache.get(key)  # mark MRU: it is about to serve
+                    self._swap_entry(entry, key, plan)
+                    event["swapped"] = True
+            if not event["swapped"]:
+                built = self._build(entry.matrix, plan, key, impl)
+                built.executor.warmup()  # trace off the request path
+                with self._swap_lock:
+                    if self.cache.peek(key) is not None:
+                        built.release()  # lost a race; the cached one wins
+                        self.cache.get(key)
+                        self._swap_entry(entry, key, plan)
+                    else:
+                        # evict-old before put: net-zero occupancy when the
+                        # old key was unshared (the common case); a shared
+                        # old key falls back to the normal LRU capacity
+                        # contract on insert
+                        self._swap_entry(entry, key, plan)
+                        self.cache.put(built)
+                event["swapped"] = True
+        entry.tuned = True
+        self.tune_events.append(event)
+        return event
+
+    def _swap_entry(self, entry: RegisteredMatrix, key: PlanKey,
+                    plan: Plan) -> None:
+        """Point ``entry`` at the new compiled plan and evict its old plan
+        unless another registered name still shares it — net-zero cache
+        occupancy, so a background swap never pushes a *different* matrix's
+        only executable out of the LRU.  Caller holds ``_swap_lock``."""
+        old_key, entry.cache_key, entry.plan = entry.cache_key, key, plan
+        if old_key != key and not any(
+            e.cache_key == old_key for e in self.registry
+        ):
+            self.cache.evict(old_key)
+
+    def drain_tuning(self, timeout: float = 30.0) -> None:
+        """Block until in-flight background refinements finish (tests)."""
+        for thread in list(self._tune_threads):
+            thread.join(timeout)
+        self._tune_threads = [t for t in self._tune_threads if t.is_alive()]
 
     # -------------------------------------------------------- introspection
 
@@ -289,4 +484,5 @@ class SpmvEngine:
         if entry is not None and not any(
             e.cache_key == entry.cache_key for e in self.registry
         ):
-            self.cache.evict(entry.cache_key)
+            with self._swap_lock:
+                self.cache.evict(entry.cache_key)

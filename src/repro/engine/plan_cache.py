@@ -10,7 +10,8 @@ jitted shard_map executable.  Entries are keyed on
 
 so the same matrix served on a different mesh, in a different precision,
 under a forced scheme, or on the other kernel impl compiles its own entry,
-while a re-registered identical matrix reuses the existing one (hit).  Eviction is LRU at a fixed capacity —
+while a re-registered identical matrix reuses the existing one (hit).
+Eviction is LRU at a fixed capacity —
 placed matrices pin device memory, so the cache bound is the engine's memory
 bound; evicted entries have their device-placed arrays explicitly deleted
 (``CompiledPlan.release``) rather than waiting for GC, so the HBM the bound
@@ -19,7 +20,7 @@ promises is actually returned at eviction time.
 from __future__ import annotations
 
 from collections import OrderedDict
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Optional, Tuple
 
 from repro.core.adaptive import Plan

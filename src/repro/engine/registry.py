@@ -31,6 +31,12 @@ class RegisteredMatrix:
     plan: Plan
     cache_key: tuple  # PlanKey of the compiled executable in the plan cache
     requests: int = 0  # multiplies served (batch of B counts as B)
+    matrix: Optional[object] = None  # api.SparseMatrix (host-side), kept so
+    # the background tuner can re-plan candidates without the caller
+    # re-providing the dense array
+    tuned: bool = False  # a measure-and-refine pass completed for this entry
+    last_x: Optional[object] = None  # most recent input (representative
+    # traffic the tuner measures candidates on)
 
 
 class MatrixRegistry:

@@ -14,7 +14,7 @@ bar of Fig. 17 (and what benchmarks/engine_throughput.py prints).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional
 
 __all__ = ["RequestRecord", "Telemetry"]

@@ -25,7 +25,7 @@ from .csr_spmv import csr_plan_chunks, csr_spmv_pallas
 from .ell_spmv import ell_spmv_pallas
 
 __all__ = ["spmv", "spmm", "pallas_program", "spmv_local_coo",
-           "spmv_local_block"]
+           "spmv_local_block", "ell_spmv_pallas"]
 
 
 def _require_concrete(m) -> None:

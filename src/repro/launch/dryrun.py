@@ -42,7 +42,7 @@ from repro.configs.base import SHAPES
 from repro.launch import steps as S
 from repro.launch.mesh import make_production_mesh
 from repro.models import lm
-from repro.optim import AdamWConfig, init_opt
+from repro.optim import AdamWConfig
 from repro.runtime import make_shardings
 
 

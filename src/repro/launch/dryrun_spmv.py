@@ -9,7 +9,8 @@ scale-free matrix on the single-pod (16,16) and multi-pod (2,16,16) meshes,
 and prints memory/cost/collective numbers — the SpMV rows of EXPERIMENTS.md
 §Dry-run and the substrate for the SpMV §Perf iterations.
 
-    PYTHONPATH=src python -m repro.launch.dryrun_spmv [--rows 1048576] [--nnz-per-row 16]
+    PYTHONPATH=src python -m repro.launch.dryrun_spmv \
+        [--rows 1048576] [--nnz-per-row 16]
 """
 import argparse
 import json
@@ -94,7 +95,8 @@ def main(argv=None):
         flat = compat.make_mesh((devs,), ("data",))
         mat = synth_partition_1d(args.rows, args.rows, args.nnz_per_row, devs)
         for ring in (False, True):
-            label = f"spmv.1d{'.ring' if ring else ''}.{'multipod512' if multi_pod else 'pod256'}"
+            pod = "multipod512" if multi_pod else "pod256"
+            label = f"spmv.1d{'.ring' if ring else ''}.{pod}"
             lowered, compiled = lower_1d(mat, flat, ring=ring)
             mem = compiled.memory_analysis()
             ca = compat.cost_analysis(compiled)

@@ -3,9 +3,11 @@
 This is the single source of truth that launch/train.py, launch/serve.py,
 launch/dryrun.py and the benchmarks all share:
 
-  * make_train_step(cfg, opt_cfg)  -> f(params, opt, batch) -> (params, opt, metrics)
+  * make_train_step(cfg, opt_cfg)  -> f(params, opt, batch)
+                                      -> (params, opt, metrics)
   * make_prefill_step(cfg, shape)  -> f(params, batch) -> (logits, caches)
-  * make_decode_step(cfg, shape)   -> f(params, caches, token[, memory]) -> (logits, caches)
+  * make_decode_step(cfg, shape)   -> f(params, caches, token[, memory])
+                                      -> (logits, caches)
   * input_specs(cfg, shape_name)   -> ShapeDtypeStruct stand-ins for every
     model input (weak-type-correct, shardable, no allocation) — the dry-run
     contract (system prompt MULTI-POD DRY-RUN item 2).
@@ -13,8 +15,6 @@ launch/dryrun.py and the benchmarks all share:
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any
 
 import jax
 import jax.numpy as jnp

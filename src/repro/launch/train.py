@@ -15,15 +15,11 @@ from __future__ import annotations
 
 import argparse
 import time
-from dataclasses import replace
 from functools import partial
 
 import jax
 
 from repro import compat
-import jax.numpy as jnp
-import numpy as np
-
 from repro.configs import get_config
 from repro.data import TokenStream
 from repro.launch import steps as S
@@ -132,7 +128,8 @@ class TrainLoop:
             return False
         like = (self.params, self.opt) if self.params is not None else (
             lm.abstract_params(self.cfg),
-            jax.eval_shape(lambda: init_opt(lm.abstract_params(self.cfg), self.opt_cfg)),
+            jax.eval_shape(
+                lambda: init_opt(lm.abstract_params(self.cfg), self.opt_cfg)),
         )
         (self.params, self.opt), self.step = restore_checkpoint(
             self.ckpt_dir, like, shardings=(self.p_sh, self.o_sh)

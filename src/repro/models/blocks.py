@@ -172,7 +172,8 @@ def block_apply(p, h, cfg, kind, memory=None):
             a = rmsnorm(p["ln1b"], a, gemma_style=True)
         h = h + a
         hin = rmsnorm(p["ln2"], h, gemma_style=gn)
-        f = M.moe_apply(p["moe"], hin, cfg) if kind == "moe" else _mlp_apply(p["mlp"], hin, cfg)
+        f = (M.moe_apply(p["moe"], hin, cfg) if kind == "moe"
+             else _mlp_apply(p["mlp"], hin, cfg))
         if gn:
             f = rmsnorm(p["ln2b"], f, gemma_style=True)
         return h + f, kv
@@ -185,7 +186,8 @@ def block_apply(p, h, cfg, kind, memory=None):
         a, cache = A.mla_apply(p["mla"], rmsnorm(p["ln1"], h), cfg)
         h = h + a
         hin = rmsnorm(p["ln2"], h)
-        f = M.moe_apply(p["moe"], hin, cfg) if kind == "mla_moe" else _mlp_apply(p["mlp"], hin, cfg)
+        f = (M.moe_apply(p["moe"], hin, cfg) if kind == "mla_moe"
+             else _mlp_apply(p["mlp"], hin, cfg))
         return h + f, cache
     if kind == "mamba":
         y, state = LA.mamba2_apply(p["mamba"], rmsnorm(p["ln1"], h), cfg)
@@ -215,7 +217,8 @@ def block_decode(p, h, cache, cfg, kind, memory=None):
             a = rmsnorm(p["ln1b"], a, gemma_style=True)
         h = h + a
         hin = rmsnorm(p["ln2"], h, gemma_style=gn)
-        f = M.moe_apply(p["moe"], hin, cfg) if kind == "moe" else _mlp_apply(p["mlp"], hin, cfg)
+        f = (M.moe_apply(p["moe"], hin, cfg) if kind == "moe"
+             else _mlp_apply(p["mlp"], hin, cfg))
         if gn:
             f = rmsnorm(p["ln2b"], f, gemma_style=True)
         return h + f, cache
@@ -228,7 +231,8 @@ def block_decode(p, h, cache, cfg, kind, memory=None):
         a, cache = A.mla_decode(p["mla"], rmsnorm(p["ln1"], h), cache, cfg)
         h = h + a
         hin = rmsnorm(p["ln2"], h)
-        f = M.moe_apply(p["moe"], hin, cfg) if kind == "mla_moe" else _mlp_apply(p["mlp"], hin, cfg)
+        f = (M.moe_apply(p["moe"], hin, cfg) if kind == "mla_moe"
+             else _mlp_apply(p["mlp"], hin, cfg))
         return h + f, cache
     if kind == "mamba":
         y, cache = LA.mamba2_decode(p["mamba"], rmsnorm(p["ln1"], h), cache, cfg)

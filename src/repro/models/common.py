@@ -14,7 +14,7 @@ Sharding axes (launch/mesh.py):
 from __future__ import annotations
 
 import math
-from typing import Any, Sequence
+from typing import Any
 
 import jax
 
@@ -107,7 +107,8 @@ Param = Any  # nested dict pytree of jax.Array
 
 def dense_init(key, d_in: int, d_out: int, dtype=jnp.bfloat16, scale=None):
     scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
-    return {"w": jax.random.normal(key, (d_in, d_out), dtype) * jnp.asarray(scale, dtype)}
+    w = jax.random.normal(key, (d_in, d_out), dtype)
+    return {"w": w * jnp.asarray(scale, dtype)}
 
 
 def dense_bias_init(key, d_in: int, d_out: int, dtype=jnp.bfloat16):

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from .common import batch_axes, dense_apply, dense_init, dense_spec, rmsnorm, rmsnorm_init, shard
+from .common import dense_apply, dense_init, dense_spec, rmsnorm, rmsnorm_init
 
 __all__ = [
     "gla_chunked",
@@ -90,7 +90,8 @@ def gla_chunked(q, k, v, log_a, chunk: int = 256, normalize: bool = False,
     kv = jnp.einsum(
         "bnjhk,bnjhv->bnhkv", kc * jnp.exp(total[:, :, None] - cum)[..., None], vc
     )
-    k_dec = (kc * jnp.exp(total[:, :, None] - cum)[..., None]).sum(axis=2)  # (B,NC,H,dk)
+    # (B,NC,H,dk)
+    k_dec = (kc * jnp.exp(total[:, :, None] - cum)[..., None]).sum(axis=2)
 
     def scan_fn(carry, xs):
         s, n = carry  # (B,H,dk,dv), (B,H,dk)
@@ -201,7 +202,8 @@ def mamba2_apply(p, x, cfg, chunk: int = 256):
                            unroll=getattr(cfg, 'unroll_layers', False))
     H = cfg.ssm_heads
     dh = cfg.ssm_d_inner // H
-    y = y + p["d_skip"][None, None, :, None] * xin.reshape(B, S, H, dh).astype(jnp.float32)
+    y = (y + p["d_skip"][None, None, :, None]
+         * xin.reshape(B, S, H, dh).astype(jnp.float32))
     y = y.reshape(B, S, cfg.ssm_d_inner).astype(x.dtype)
     y = rmsnorm(p["norm"], y * jax.nn.silu(z))
     return dense_apply(p["out_proj"], y), state
@@ -213,7 +215,8 @@ def mamba2_decode(p, x, state: RecurrentState, cfg):
     y, state = gla_step(state, c, b, v, log_a)
     H = cfg.ssm_heads
     dh = cfg.ssm_d_inner // H
-    y = y + p["d_skip"][None, None, :, None] * xin.reshape(B, 1, H, dh).astype(jnp.float32)
+    y = (y + p["d_skip"][None, None, :, None]
+         * xin.reshape(B, 1, H, dh).astype(jnp.float32))
     y = y.reshape(B, 1, cfg.ssm_d_inner).astype(x.dtype)
     y = rmsnorm(p["norm"], y * jax.nn.silu(z))
     return dense_apply(p["out_proj"], y), state

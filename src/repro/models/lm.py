@@ -16,7 +16,6 @@ Entry points:
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Any, NamedTuple
 
 import jax
@@ -88,7 +87,8 @@ def init_params(key, cfg: ArchConfig, dtype=jnp.bfloat16):
     if cfg.mtp_depth:
         p["mtp"] = {
             "proj": {
-                "w": jax.random.normal(next(keys), (2 * cfg.d_model, cfg.d_model), dtype)
+                "w": jax.random.normal(
+                    next(keys), (2 * cfg.d_model, cfg.d_model), dtype)
                 * (1.0 / math.sqrt(2 * cfg.d_model))
             },
             "norm": rmsnorm_init(cfg.d_model, dtype),
@@ -273,7 +273,8 @@ def _mtp_loss(params, h, batch, cfg):
     labels_t2 = jnp.concatenate(
         [batch["labels"][:, 2:], jnp.zeros_like(batch["labels"][:, :2])], axis=1
     )
-    return cross_entropy(logits, labels_t2, mask=mask * jnp.ones_like(labels_t2, jnp.float32))
+    return cross_entropy(logits, labels_t2,
+                         mask=mask * jnp.ones_like(labels_t2, jnp.float32))
 
 
 # ---------------------------------------------------------------------------

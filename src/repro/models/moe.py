@@ -31,7 +31,7 @@ from repro import compat
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from .common import batch_axes, dense_apply, dense_init, shard
+from .common import dense_init, shard
 
 __all__ = ["moe_init", "moe_spec", "moe_apply"]
 

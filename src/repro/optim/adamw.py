@@ -9,7 +9,6 @@ config at 512 chips; DESIGN.md §5).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 from typing import Any, NamedTuple
 
 import jax

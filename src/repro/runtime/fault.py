@@ -71,7 +71,8 @@ class HealthMonitor:
             for h, v in meds.items():
                 if v > fleet + self.straggler_mad_k * mad and v > 1.05 * fleet:
                     events.append(
-                        FaultEvent("straggler", h, step, f"median {v:.3f}s vs fleet {fleet:.3f}s")
+                        FaultEvent("straggler", h, step,
+                                   f"median {v:.3f}s vs fleet {fleet:.3f}s")
                     )
         return events
 

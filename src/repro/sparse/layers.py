@@ -70,7 +70,8 @@ def sparse_linear_init(key, d_in: int, d_out: int, density: float,
 def sparse_linear_spec():
     # block stream sharded over the model axis (the 1D nnz-balanced layout:
     # equal blocks per device since the pattern is row-balanced)
-    return {"browind": P("model"), "bcolind": P("model"), "bvalues": P("model", None, None)}
+    return {"browind": P("model"), "bcolind": P("model"),
+            "bvalues": P("model", None, None)}
 
 
 def sparse_linear_apply(p, x, d_out: int):

@@ -1,0 +1,187 @@
+"""TuningCache — measured winners, persisted so tuning pays once.
+
+Measuring candidates costs real compiles and real runs; the result is a
+property of (matrix content, device topology, dtype, batch shape) and
+nothing else.  The cache keys on exactly that tuple, so a re-``register``
+of the same matrix on the same pool — today or next week — replans from
+the recorded winner instead of re-measuring.
+
+On-disk format is one JSON document (version-tagged); writes are atomic
+(temp file + ``os.replace``) and a corrupt or unreadable file degrades to
+an empty cache rather than an exception — a broken cache must never take
+the serving path down.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from repro.core.adaptive import Plan
+
+__all__ = ["TuneKey", "TuningCache", "topology_key", "record_to_plan", "make_key"]
+
+_VERSION = 1
+
+
+def topology_key(devices=None, mesh=None) -> str:
+    """Stable identity of the device pool a measurement is valid for.
+
+    ``platform:count`` (e.g. ``cpu:8``, ``tpu:4``) — measurements on a
+    different platform or pool size are different cache entries.
+    """
+    if mesh is not None:
+        devices = list(mesh.devices.flat)
+    elif devices is None:
+        import jax
+
+        devices = [jax.devices()[0]]
+    else:
+        devices = list(devices)
+    platforms = sorted({getattr(d, "platform", "cpu") for d in devices})
+    return f"{'+'.join(platforms)}:{len(devices)}"
+
+
+@dataclass(frozen=True)
+class TuneKey:
+    """(matrix fingerprint, device topology, dtype, batch, impls, block) —
+    one tuning problem; the unit the cache never re-measures.
+
+    ``impls`` and ``block`` are part of the key because they are part of
+    the *search space*: a winner found among xla candidates answers nothing
+    about a pallas search on the same matrix, and a different block tile
+    changes which fitted candidates exist at all.
+    """
+
+    fingerprint: str
+    topology: str
+    dtype: str  # numpy dtype name, e.g. "float32"
+    batch: int = 1
+    impls: str = "xla"  # "+"-joined sorted impls searched, e.g. "pallas+xla"
+    block: tuple = (8, 16)
+
+    def encode(self) -> str:
+        return (
+            f"{self.fingerprint}|{self.topology}|{self.dtype}|{self.batch}"
+            f"|{self.impls}|{self.block[0]}x{self.block[1]}"
+        )
+
+
+def record_to_plan(record: dict) -> Plan:
+    """Rebuild the winning adaptive.Plan from a cached record."""
+    s = record["scheme"]
+    return Plan(
+        partitioning=s["partitioning"],
+        scheme=s["scheme"],
+        fmt=s["fmt"],
+        merge=s["merge"],
+        grid=tuple(s["grid"]),
+        reason=s.get("reason", "tuned winner (from TuningCache)"),
+    )
+
+
+class TuningCache:
+    """Persistent map TuneKey -> winning-plan record.
+
+    Args:
+      path: JSON file backing the cache; ``None`` keeps it in-memory only
+        (same interface, nothing persisted — the default for one-shot
+        ``scheme="tune"`` calls).
+    """
+
+    def __init__(self, path: Optional[str] = None):
+        # expanduser: the documented usage is tune_cache="~/.cache/..."
+        self.path = (
+            os.path.expanduser(os.fspath(path)) if path is not None else None
+        )
+        self._entries: dict = {}
+        self.load_error: Optional[str] = None
+        self._load()
+
+    # ------------------------------------------------------------ disk I/O
+
+    def _load(self) -> None:
+        if self.path is None or not os.path.exists(self.path):
+            return
+        try:
+            with open(self.path, encoding="utf-8") as fh:
+                doc = json.load(fh)
+            if doc.get("version") != _VERSION:
+                raise ValueError(f"unknown cache version {doc.get('version')!r}")
+            entries = doc["entries"]
+            if not isinstance(entries, dict):
+                raise ValueError("entries is not a mapping")
+            self._entries = entries
+        except (OSError, ValueError, KeyError, AttributeError) as e:
+            # corrupt/unreadable cache: start empty, remember why (test hook
+            # + debuggability), never raise into the serving path
+            self.load_error = f"{type(e).__name__}: {e}"
+            self._entries = {}
+
+    def _save(self) -> None:
+        if self.path is None:
+            return
+        doc = {"version": _VERSION, "entries": self._entries}
+        directory = os.path.dirname(os.path.abspath(self.path))
+        os.makedirs(directory, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w", encoding="utf-8") as fh:
+                json.dump(doc, fh, indent=2, sort_keys=True)
+            os.replace(tmp, self.path)  # atomic: readers see old or new
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    # ------------------------------------------------------------ mapping
+
+    def get(self, key: TuneKey) -> Optional[dict]:
+        return self._entries.get(key.encode())
+
+    def put(self, key: TuneKey, record: dict) -> None:
+        self._entries[key.encode()] = record
+        self._save()
+
+    def __contains__(self, key: TuneKey) -> bool:
+        return key.encode() in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self._save()
+
+
+def make_key(
+    matrix,
+    *,
+    devices=None,
+    mesh=None,
+    batch: Optional[int] = None,
+    impls=("xla",),
+    block=(8, 16),
+) -> TuneKey:
+    """The TuneKey for tuning ``matrix`` on the given pool.
+
+    ``impls`` may be a string or an iterable of impl names; order does not
+    matter (the key normalizes to a sorted join).
+    """
+    if isinstance(impls, str):
+        impls = (impls,)
+    return TuneKey(
+        fingerprint=matrix.fingerprint(),
+        topology=topology_key(devices=devices, mesh=mesh),
+        dtype=np.dtype(matrix.dtype).name,
+        batch=int(batch or 1),
+        impls="+".join(sorted(set(impls))),
+        block=tuple(block),
+    )

@@ -4,7 +4,6 @@ tests/test_distributed.py; prints sentinel lines the test asserts on."""
 import os
 
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import sys
 
 import numpy as np
 import jax
@@ -24,7 +23,8 @@ def main():
         print("DISTRIBUTED SKIP")
         return
     rng = np.random.default_rng(0)
-    a = ((rng.random((192, 256)) < 0.05) * rng.standard_normal((192, 256))).astype(np.float32)
+    a = ((rng.random((192, 256)) < 0.05)
+         * rng.standard_normal((192, 256))).astype(np.float32)
     a[11] = rng.standard_normal(256)  # dense row (scale-free-ish)
     x = rng.standard_normal(256).astype(np.float32)
     want = a @ x

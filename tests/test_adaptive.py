@@ -1,10 +1,8 @@
 """Adaptive scheme selection (paper Rec. #3 / Obs. 15-18) + data generators."""
-import numpy as np
 
 from repro.core.adaptive import HardwareModel, estimate_time, select_scheme
 from repro.core.stats import compute_stats
 from repro.data import (
-    MatrixSpec,
     block_matrix,
     paper_large_suite,
     paper_small_suite,

@@ -97,7 +97,8 @@ def test_prefill_decode_consistency(arch):
     params = lm.init_params(KEY, cfg, jnp.float32)
     batch = _batch(cfg, seq=16)
     tokens = batch["tokens"][:, :16]
-    memory = lm.encode(params, batch["frames"][:, :16], cfg) if cfg.encoder_layers else None
+    memory = (lm.encode(params, batch["frames"][:, :16], cfg)
+              if cfg.encoder_layers else None)
     pe = batch.get("prefix_embeds")
     _, caches = lm.prefill(params, tokens, cfg, 32, prefix_embeds=pe, memory=memory)
     nxt = jnp.zeros((B, 1), jnp.int32)

@@ -4,9 +4,8 @@ import jax
 from repro import compat
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.runtime import FaultEvent, HealthMonitor, RestartPolicy
+from repro.runtime import HealthMonitor, RestartPolicy
 from repro.runtime.elastic import make_shardings, rescale_mesh_shape, sanitize_shardings
 
 

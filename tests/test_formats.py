@@ -1,5 +1,4 @@
 """Format containers: round-trips, conversions, dtype coverage."""
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

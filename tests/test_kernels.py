@@ -89,8 +89,9 @@ def test_block_kernel_sweep(block, dtype, batch):
 def test_ell_kernel(k_pad):
     a = rand_sparse(90, 64, 0.1, np.float32, seed=11)
     ci, vv, rn = dense_to_ell(a, k=k_pad)
+    rand_x = RNG.standard_normal(64).astype(np.float32)
     got = ell_spmv_pallas(jnp.asarray(ci), jnp.asarray(vv), jnp.asarray(rn),
-                          jnp.asarray(rand_x := RNG.standard_normal(64).astype(np.float32)))
+                          jnp.asarray(rand_x))
     want = ref.ell_spmv_ref(jnp.asarray(ci), jnp.asarray(vv), jnp.asarray(rand_x),
                             jnp.asarray(rn))
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)

@@ -8,12 +8,7 @@ import pytest
 
 from repro.configs import get_config
 from repro.models import moe as M
-from repro.sparse.layers import (
-    block_sparse_ffn_apply,
-    block_sparse_ffn_init,
-    sparse_linear_apply,
-    sparse_linear_init,
-)
+from repro.sparse.layers import sparse_linear_apply, sparse_linear_init
 
 KEY = jax.random.PRNGKey(0)
 

@@ -103,8 +103,10 @@ def test_microbatched_step_matches_full_batch():
     opt = init_opt(params, opt_cfg)
     tokens = jax.random.randint(key, (4, 32), 0, cfg.vocab)
     batch = {"tokens": tokens, "labels": tokens}
-    p1, _, m1 = jax.jit(make_train_step(cfg, opt_cfg, microbatches=1))(params, opt, batch)
-    p2, _, m2 = jax.jit(make_train_step(cfg, opt_cfg, microbatches=2))(params, opt, batch)
+    step1 = jax.jit(make_train_step(cfg, opt_cfg, microbatches=1))
+    step2 = jax.jit(make_train_step(cfg, opt_cfg, microbatches=2))
+    p1, _, m1 = step1(params, opt, batch)
+    p2, _, m2 = step2(params, opt, batch)
     np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=1e-5)
     for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,

@@ -97,7 +97,8 @@ def test_csr_rejects_element_granularity():
 def test_block_partition_1d():
     rng = np.random.default_rng(5)
     mask = rng.random((8, 6)) < 0.4
-    a = (np.kron(mask, np.ones((4, 8))) * rng.standard_normal((32, 48))).astype(np.float32)
+    a = (np.kron(mask, np.ones((4, 8)))
+         * rng.standard_normal((32, 48))).astype(np.float32)
     part = partition_1d(a, 4, fmt="bcoo", balance="nnz", block=(4, 8))
     np.testing.assert_allclose(reconstruct(part), a, rtol=1e-6)
 

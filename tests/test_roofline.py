@@ -1,6 +1,5 @@
 """Roofline machinery: HLO collective parser, extrapolation, analytic FLOPs."""
 import numpy as np
-import pytest
 
 from repro.analysis import roofline as R
 from repro.configs import get_config

@@ -1,0 +1,433 @@
+"""repro.tune — candidate generation, measurement, cache, scheme="tune".
+
+The deterministic FakeMeasurer stands in for wall-clock timing everywhere
+except the slow-marked end-to-end test, so the assertions here are exact:
+the tuner's argmin, the cache's never-re-measure contract, and the engine's
+margin-gated executor swap are all decidable without real timing noise.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import SparseMatrix
+from repro.core.adaptive import HardwareModel, enumerate_schemes
+from repro.data.matrices import block_matrix, regular_matrix, scale_free_matrix
+from repro.engine import SpmvEngine
+from repro.tune import (
+    CandidateGenerator,
+    FakeMeasurer,
+    Measurer,
+    TuneKey,
+    Tuner,
+    TuningCache,
+    make_key,
+)
+
+RNG = np.random.default_rng(0)
+
+
+def _matrix(kind="regular"):
+    if kind == "regular":
+        return regular_matrix(96, 128, 5, seed=1)
+    if kind == "scale-free":
+        return scale_free_matrix(96, 128, 600, seed=2)
+    return block_matrix(96, 128, block=(8, 16), block_density=0.2, seed=3)
+
+
+# ----------------------------------------------------------- enumeration
+
+
+def test_enumerate_schemes_analytic_pick_first():
+    a = scale_free_matrix(512, 512, 6 * 512, seed=1)  # NNZ-r-std > 25
+    stats = SparseMatrix.from_dense(a).stats
+    hw = HardwareModel(chips=4)
+    schemes = enumerate_schemes(stats, hw)
+    assert schemes[0].partitioning == "1d"  # scale-free -> 1d.nnz (Obs. 5/18)
+    assert schemes[0].scheme == "nnz"
+    keys = [(p.partitioning, p.scheme, p.fmt, p.merge) for p in schemes]
+    assert len(keys) == len(set(keys)), "duplicate candidates"
+
+
+def test_candidate_generator_dedups_and_caps():
+    sm = SparseMatrix.from_dense(_matrix("block"))
+    gen = CandidateGenerator(max_candidates=3)
+    plans = gen.plans(sm)
+    assert 1 <= len(plans) <= 3
+    ids = [(p.scheme_id, p.impl) for p in plans]
+    assert len(ids) == len(set(ids))
+
+
+def test_candidate_generator_block_matrix_tries_block_formats():
+    sm = SparseMatrix.from_dense(_matrix("block"))
+    fmts = {p.fmt for p in CandidateGenerator(max_candidates=16).plans(sm)}
+    assert "bcoo" in fmts or "bcsr" in fmts
+
+
+# ----------------------------------------------------------- measurement
+
+
+def test_fake_measurer_is_deterministic_and_cost_driven():
+    sm = SparseMatrix.from_dense(_matrix())
+    plan = sm.plan(scheme="1d.nnz")
+    a = FakeMeasurer(seed=3).measure(plan).mean_s
+    b = FakeMeasurer(seed=3).measure(plan).mean_s
+    c = FakeMeasurer(seed=4).measure(plan).mean_s
+    assert a == b
+    assert a != c
+    forced = FakeMeasurer(costs={plan.scheme_id: 42.0}).measure(plan)
+    assert forced.mean_s == 42.0
+
+
+def test_real_measurer_single_device_runs_and_releases():
+    sm = SparseMatrix.from_dense(_matrix())
+    plan = sm.plan(scheme="1d.nnz")
+    meas = Measurer(warmup=1, iters=2, trim=0)
+    m = meas.measure(plan, meas.representative(sm))
+    assert m.mean_s > 0
+    assert len(m.times_s) == 2
+    assert m.scheme_id == plan.scheme_id
+
+
+# ----------------------------------------------------------- TuningCache
+
+
+def test_tuning_cache_roundtrip(tmp_path):
+    path = tmp_path / "tune.json"
+    cache = TuningCache(path=path)
+    key = TuneKey("fp0", "cpu:1", "float32", 1)
+    record = {"scheme": {"partitioning": "1d"}, "impl": "xla", "mean_s": 1.0}
+    cache.put(key, record)
+    reloaded = TuningCache(path=path)
+    assert reloaded.get(key) == record
+    assert len(reloaded) == 1
+
+
+def test_tuning_cache_key_isolation(tmp_path):
+    cache = TuningCache(path=tmp_path / "tune.json")
+    base = TuneKey("fp0", "cpu:1", "float32", 1)
+    cache.put(base, {"mean_s": 1.0})
+    assert cache.get(TuneKey("fp1", "cpu:1", "float32", 1)) is None
+    assert cache.get(TuneKey("fp0", "cpu:8", "float32", 1)) is None
+    assert cache.get(TuneKey("fp0", "cpu:1", "bfloat16", 1)) is None
+    assert cache.get(TuneKey("fp0", "cpu:1", "float32", 32)) is None
+    assert cache.get(TuneKey("fp0", "cpu:1", "float32", 1, "pallas")) is None
+    assert (
+        cache.get(TuneKey("fp0", "cpu:1", "float32", 1, "xla", (16, 16)))
+        is None
+    )
+    assert cache.get(base) == {"mean_s": 1.0}
+
+
+@pytest.mark.parametrize(
+    "payload",
+    [
+        "not json at all {",
+        '{"version": 999, "entries": {}}',
+        '{"no_entries_key": true}',
+        '{"version": 1, "entries": []}',
+    ],
+)
+def test_tuning_cache_corrupt_file_recovers(tmp_path, payload):
+    path = tmp_path / "tune.json"
+    path.write_text(payload)
+    cache = TuningCache(path=path)  # must not raise
+    assert len(cache) == 0
+    assert cache.load_error is not None
+    key = TuneKey("fp0", "cpu:1", "float32", 1)
+    cache.put(key, {"mean_s": 2.0})  # overwrites the corrupt file
+    assert TuningCache(path=path).get(key) == {"mean_s": 2.0}
+    assert json.loads(path.read_text())["version"] == 1
+
+
+def test_make_key_folds_in_dtype_and_batch():
+    sm32 = SparseMatrix.from_dense(_matrix())
+    k1 = make_key(sm32)
+    k2 = make_key(sm32, batch=8)
+    assert k1 != k2
+    assert k1.fingerprint == sm32.fingerprint()
+
+
+# ----------------------------------------------------------- the tuner
+
+
+def test_tune_measured_never_worse_than_analytic_pick():
+    sm = SparseMatrix.from_dense(_matrix())
+    tuner = Tuner(measurer=FakeMeasurer(seed=11))
+    result = tuner.tune(sm)
+    assert result.best_measurement.mean_s <= result.baseline.mean_s
+    assert result.speedup >= 1.0
+    plan = result.best
+    assert plan.measured["mean_s"] <= plan.measured["baseline_mean_s"]
+    assert "measured:" in plan.describe()
+
+
+def test_scheme_tune_is_deterministic_under_seeded_fake_measurer():
+    picks = []
+    for _ in range(2):
+        sm = SparseMatrix.from_dense(_matrix("scale-free"))
+        tuner = Tuner(measurer=FakeMeasurer(seed=5))
+        pln = sm.plan(scheme="tune", tuner=tuner)
+        picks.append((pln.scheme_id, pln.impl, pln.grid))
+    assert picks[0] == picks[1]
+
+
+def test_scheme_tune_rejects_silent_overrides():
+    sm = SparseMatrix.from_dense(_matrix())
+    for kw in ({"fmt": "csr"}, {"partitioning": "2d"}, {"merge": "psum"},
+               {"grid": (2, 2)}):
+        with pytest.raises(ValueError, match="searches"):
+            sm.plan(scheme="tune", tuner=Tuner(measurer=FakeMeasurer()), **kw)
+
+
+def test_tuning_cache_expands_user_path(tmp_path, monkeypatch):
+    monkeypatch.setenv("HOME", str(tmp_path))
+    cache = TuningCache(path="~/tune-cache/w.json")
+    key = TuneKey("fp0", "cpu:1", "float32", 1)
+    cache.put(key, {"mean_s": 1.0})
+    assert (tmp_path / "tune-cache" / "w.json").exists()
+    assert TuningCache(path="~/tune-cache/w.json").get(key) == {"mean_s": 1.0}
+
+
+def test_scheme_tune_respects_forced_costs():
+    sm = SparseMatrix.from_dense(_matrix())
+    costs = {"1d.nnz-rgrn.csr.ppermute": 1e-9}
+    pln = sm.plan(scheme="tune", tuner=Tuner(measurer=FakeMeasurer(costs=costs)))
+    assert pln.scheme_id == "1d.nnz-rgrn.csr.ppermute"
+
+
+def test_tune_cache_hit_skips_measurement(tmp_path):
+    a = _matrix()
+    meas1 = FakeMeasurer(seed=1)
+    cache_path = tmp_path / "winners.json"
+    t1 = Tuner(measurer=meas1, cache=TuningCache(path=cache_path))
+    r1 = t1.tune(SparseMatrix.from_dense(a))
+    assert not r1.from_cache
+    assert len(meas1.calls) >= 2
+
+    meas2 = FakeMeasurer(seed=1)
+    t2 = Tuner(measurer=meas2, cache=TuningCache(path=cache_path))
+    r2 = t2.tune(SparseMatrix.from_dense(a))  # fresh process, same matrix
+    assert r2.from_cache
+    assert meas2.calls == []  # the whole point: zero re-measures
+    assert r2.best.scheme_id == r1.best.scheme_id
+    assert r2.best.measured["from_cache"]
+
+
+def test_tune_cache_does_not_cross_impls(tmp_path):
+    """An xla winner answers nothing about a pallas search: the second
+    tune must re-measure its own candidates, not return the xla record."""
+    a = _matrix()
+    path = tmp_path / "w.json"
+
+    def _tuner(impl):
+        return Tuner(
+            generator=CandidateGenerator(impls=(impl,)),
+            measurer=FakeMeasurer(),
+            cache=TuningCache(path=path),
+        )
+
+    r_xla = _tuner("xla").tune(SparseMatrix.from_dense(a))
+    assert r_xla.best.impl == "xla"
+    r = _tuner("pallas").tune(SparseMatrix.from_dense(a))
+    assert not r.from_cache
+    assert r.best.impl == "pallas"
+
+
+def test_tune_cache_miss_on_different_matrix(tmp_path):
+    cache = TuningCache(path=tmp_path / "winners.json")
+    meas = FakeMeasurer()
+    tuner = Tuner(measurer=meas, cache=cache)
+    tuner.tune(SparseMatrix.from_dense(_matrix("regular")))
+    n = len(meas.calls)
+    r = tuner.tune(SparseMatrix.from_dense(_matrix("scale-free")))
+    assert not r.from_cache
+    assert len(meas.calls) > n
+
+
+def test_tune_cache_hit_rebases_baseline_on_callers_incumbent(tmp_path):
+    """A cache hit must answer the caller's margin question: result.baseline
+    must describe the baseline= incumbent (from its recorded candidate
+    timing), not whatever baseline the original run happened to record."""
+    a = _matrix()
+    sm = SparseMatrix.from_dense(a)
+    cache = TuningCache(path=tmp_path / "w.json")
+    tuner = Tuner(measurer=FakeMeasurer(seed=2), cache=cache)
+    first = tuner.tune(sm)
+    # pick a measured non-winner candidate as the next caller's incumbent
+    other = next(
+        m for m in first.measurements if m is not first.best_measurement
+    )
+    inc_plan = sm.plan(scheme=other.scheme_id.rsplit(".", 2)[0],
+                       fmt=other.fmt).scheme
+    meas2 = FakeMeasurer(seed=2)
+    r2 = Tuner(measurer=meas2, cache=cache).tune(
+        SparseMatrix.from_dense(a), baseline=(inc_plan, "xla")
+    )
+    assert r2.from_cache
+    assert meas2.calls == []
+    assert r2.baseline.scheme_id == other.scheme_id
+    assert r2.baseline.mean_s == pytest.approx(other.mean_s)
+
+
+def test_tune_cache_bypassed_when_record_lacks_the_incumbent(tmp_path):
+    """An incumbent the record never measured cannot be compared from the
+    cache — the tuner must re-measure rather than return stale numbers."""
+    cache = TuningCache(path=tmp_path / "w.json")
+    a = _matrix()
+    tuner = Tuner(measurer=FakeMeasurer(), cache=cache)
+    tuner.tune(SparseMatrix.from_dense(a))
+    sm = SparseMatrix.from_dense(a)
+    unmeasured = sm.plan(scheme="2d.variable-sized").scheme  # exotic: never
+    meas = FakeMeasurer()                                    # a candidate
+    r = Tuner(measurer=meas, cache=cache).tune(
+        sm, baseline=(unmeasured, "xla")
+    )
+    assert not r.from_cache
+    assert meas.calls  # actually re-measured
+
+
+# ------------------------------------------------- engine measure-and-refine
+
+
+def _tuned_engine(costs=None, **kw):
+    tuner = Tuner(measurer=FakeMeasurer(costs=costs or {}))
+    return SpmvEngine(cache_capacity=4, tune=True, tuner=tuner, **kw)
+
+
+def test_engine_refine_swaps_to_forced_winner():
+    eng = _tuned_engine(costs={"1d.nnz-rgrn.csr.ppermute": 1e-9})
+    a = _matrix()
+    eng.register("m", a)
+    event = eng.refine("m")
+    assert event["swapped"]
+    entry = eng.registry.get("m")
+    assert entry.cache_key[3] == "1d.nnz-rgrn.csr.ppermute"
+    assert entry.tuned
+    x = RNG.standard_normal(a.shape[1]).astype(np.float32)
+    np.testing.assert_allclose(eng.multiply("m", x), a @ x, rtol=1e-3, atol=1e-4)
+
+
+def test_engine_refine_keeps_incumbent_inside_margin():
+    # every candidate costs the same -> nothing clears the 0.9 margin
+    eng = _tuned_engine(costs=None)
+    eng._tuner.measurer.costs = {}
+    eng._tuner.measurer._fake_time = lambda plan: 1e-3
+    eng.register("m", _matrix())
+    before = eng.registry.get("m").cache_key
+    event = eng.refine("m")
+    assert not event["swapped"]
+    assert eng.registry.get("m").cache_key == before
+    assert eng.registry.get("m").tuned
+
+
+def test_engine_background_refine_triggers_off_live_traffic():
+    eng = _tuned_engine(costs={"1d.nnz-rgrn.csr.ppermute": 1e-9}, tune_after=3)
+    a = _matrix()
+    eng.register("m", a)
+    x = RNG.standard_normal(a.shape[1]).astype(np.float32)
+    for _ in range(4):
+        eng.multiply("m", x)
+    eng.drain_tuning()
+    assert eng.tune_events, "no refinement ran"
+    assert eng.tune_events[0]["swapped"]
+    assert eng.registry.get("m").tuned
+    np.testing.assert_allclose(eng.multiply("m", x), a @ x, rtol=1e-3, atol=1e-4)
+
+
+def test_engine_refine_is_one_shot_per_entry():
+    eng = _tuned_engine(tune_after=2)
+    a = _matrix()
+    eng.register("m", a)
+    x = RNG.standard_normal(a.shape[1]).astype(np.float32)
+    for _ in range(6):
+        eng.multiply("m", x)
+    eng.drain_tuning()
+    assert len(eng.tune_events) == 1
+
+
+def test_engine_refine_swap_does_not_evict_other_matrices():
+    """At cache capacity, a refinement swap must be net-zero (old plan out,
+    winner in) — never pushing a *different* matrix's only executable out."""
+    eng = _tuned_engine(costs={"1d.nnz-rgrn.csr.ppermute": 1e-9})
+    eng.cache.capacity = 2
+    a1, a2 = _matrix("regular"), _matrix("scale-free")
+    eng.register("m1", a1)
+    eng.register("m2", a2)
+    x1 = RNG.standard_normal(a1.shape[1]).astype(np.float32)
+    eng.multiply("m1", x1)  # m2 is now the LRU entry
+    event = eng.refine("m1")
+    assert event["swapped"]
+    assert eng.plan_for("m2") is not None, "refine evicted m2's only plan"
+    x2 = RNG.standard_normal(a2.shape[1]).astype(np.float32)
+    np.testing.assert_allclose(
+        eng.multiply("m2", x2), a2 @ x2, rtol=1e-3, atol=1e-4
+    )
+    assert eng.plan_for("m1") is not None  # old m1 plan evicted, winner in
+    assert len(eng.cache) == 2
+
+
+def test_engine_failing_refinement_does_not_respawn():
+    class _Boom:
+        def tune(self, *a, **k):
+            raise RuntimeError("measurement exploded")
+
+    eng = SpmvEngine(cache_capacity=4, tune=True, tuner=_Boom(), tune_after=2)
+    a = _matrix()
+    eng.register("m", a)
+    x = RNG.standard_normal(a.shape[1]).astype(np.float32)
+    for _ in range(6):
+        eng.multiply("m", x)
+    eng.drain_tuning()
+    assert len(eng.tune_events) == 1  # one failed attempt, no respawn storm
+    assert "error" in eng.tune_events[0]
+    assert eng.registry.get("m").tuned
+    np.testing.assert_allclose(eng.multiply("m", x), a @ x, rtol=1e-3, atol=1e-4)
+
+
+def test_engine_tune_margin_validation():
+    with pytest.raises(ValueError):
+        SpmvEngine(tune=True, tune_margin=0.0)
+    with pytest.raises(ValueError):
+        SpmvEngine(tune=True, tune_margin=1.5)
+
+
+# ----------------------------------------------------------- slow (nightly)
+
+
+@pytest.mark.slow
+def test_tune_end_to_end_real_measurer():
+    """The full loop with real timing: the tuned pick must serve correctly
+    and must not measure slower than the analytic pick (argmin contract)."""
+    a = _matrix("scale-free")
+    sm = SparseMatrix.from_dense(a)
+    tuner = Tuner(measurer=Measurer(warmup=1, iters=3))
+    result = tuner.tune(sm)
+    assert result.best_measurement.mean_s <= result.baseline.mean_s
+    exe = result.best.compile()
+    x = RNG.standard_normal(a.shape[1]).astype(np.float32)
+    np.testing.assert_allclose(exe(x), a @ x, rtol=1e-3, atol=1e-4)
+    exe.release()
+
+
+@pytest.mark.slow
+def test_engine_refine_real_measurer_multi_device():
+    """Long tuner loop on whatever pool exists (nightly runs this with 8
+    forced host devices, so distributed candidates are measured too)."""
+    eng = SpmvEngine(
+        cache_capacity=8,
+        tune=True,
+        tuner=Tuner(measurer=Measurer(warmup=1, iters=2, trim=0)),
+        tune_after=2,
+    )
+    a = _matrix("regular")
+    eng.register("m", a)
+    x = RNG.standard_normal(a.shape[1]).astype(np.float32)
+    for _ in range(3):
+        eng.multiply("m", x)
+    eng.drain_tuning(timeout=300.0)
+    assert eng.tune_events
+    event = eng.tune_events[0]
+    assert "error" not in event
+    np.testing.assert_allclose(eng.multiply("m", x), a @ x, rtol=1e-3, atol=1e-4)

@@ -1,0 +1,97 @@
+#!/usr/bin/env python
+"""Benchmark regression gate (CI perf job).
+
+Compares a fresh ``benchmarks/run.py --smoke --json`` output against the
+committed ``BENCH_smoke.json`` baseline, row by row (matched on the CSV
+``name`` column), and fails when any row's wall-clock regresses by more
+than ``--threshold`` (default 2.5x — tiny-shape CPU timings are dispatch-
+dominated and noisy across runner generations, so the gate catches
+catastrophic regressions like an accidental retrace per call, not 10%
+drift).  A row present in the baseline but missing from the current run
+also fails: a silently vanished benchmark is exactly the wiring rot the
+smoke run exists to catch.  New rows (current-only) are reported but pass —
+adding a benchmark must not require a two-step baseline dance.
+
+    python tools/check_bench.py --baseline BENCH_smoke.json \
+        --current bench_out.json [--threshold 2.5]
+
+Exit status: 0 clean, 1 on regression/missing rows, 2 on unreadable input.
+Update the baseline by committing a fresh ``--smoke --json`` output.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_rows(path: str) -> dict:
+    """{name: us_per_call} from a benchmarks/run.py --json document."""
+    with open(path, encoding="utf-8") as fh:
+        doc = json.load(fh)
+    rows = doc["rows"] if isinstance(doc, dict) else doc
+    out = {}
+    for r in rows:
+        out[r["name"]] = float(r["us_per_call"])
+    return out
+
+
+def compare(base: dict, cur: dict, threshold: float) -> tuple[list, list, list]:
+    """Returns (regressions, missing, new) where regressions are
+    (name, base_us, cur_us, ratio) tuples."""
+    regressions = []
+    for name in sorted(base.keys() & cur.keys()):
+        b, c = base[name], cur[name]
+        ratio = c / b if b > 0 else float("inf")
+        if ratio > threshold:
+            regressions.append((name, b, c, ratio))
+    missing = sorted(base.keys() - cur.keys())
+    new = sorted(cur.keys() - base.keys())
+    return regressions, missing, new
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_smoke.json",
+                    help="committed baseline JSON")
+    ap.add_argument("--current", default="bench_out.json",
+                    help="fresh --smoke --json output")
+    ap.add_argument("--threshold", type=float, default=2.5,
+                    help="fail when current/baseline exceeds this ratio")
+    args = ap.parse_args()
+
+    try:
+        base = load_rows(args.baseline)
+        cur = load_rows(args.current)
+    except (OSError, ValueError, KeyError, TypeError) as e:
+        print(f"ERROR: unreadable benchmark JSON: {type(e).__name__}: {e}")
+        return 2
+
+    regressions, missing, new = compare(base, cur, args.threshold)
+
+    shared = sorted(base.keys() & cur.keys())
+    for name in shared:
+        ratio = cur[name] / base[name] if base[name] > 0 else float("inf")
+        flag = " <-- REGRESSION" if ratio > args.threshold else ""
+        print(f"{name}: {base[name]:.1f}us -> {cur[name]:.1f}us "
+              f"({ratio:.2f}x){flag}")
+    for name in new:
+        print(f"{name}: (new row, {cur[name]:.1f}us — no baseline yet)")
+    for name in missing:
+        print(f"{name}: MISSING from current run (baseline {base[name]:.1f}us)")
+
+    print(f"\n{len(shared)} rows compared against {args.baseline} "
+          f"(threshold {args.threshold}x): "
+          f"{len(regressions)} regressions, {len(missing)} missing, "
+          f"{len(new)} new")
+    if regressions or missing:
+        print("FAIL — if intentional, commit a fresh baseline: "
+              "PYTHONPATH=src python -m benchmarks.run --smoke "
+              "--json BENCH_smoke.json")
+        return 1
+    print("OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
