@@ -1,0 +1,158 @@
+"""Serving SLO benchmark — replay a seeded workload, emit BENCH_serve.json.
+
+    PYTHONPATH=src python -m benchmarks.serve_replay [--smoke]
+                                                     [--json BENCH_serve.json]
+                                                     [--requests N]
+
+Fires a seeded Zipfian/bursty trace (two tenants, mixed vector/batch
+requests) at an :class:`~repro.serve.AsyncSpmvService` and prints
+``name,us_per_call,derived`` CSV rows — p50/p95/p99/mean serving latency
+plus a reject-rate row — the same row shape every other benchmark emits, so
+``tools/check_bench.py`` can gate a fresh run against the committed
+``BENCH_serve.json`` baseline and CI can upload the JSON as the perf
+trajectory.
+
+A warmup replay (same matrices, different seed) runs first and is
+discarded: it pays the per-bucket trace/compile costs so the measured
+percentiles describe steady-state serving, not compilation.
+
+``--smoke`` shrinks the trace for the CI perf job.  The smoke workload has
+no deadlines, so its reject-rate row is structurally 0.0 — the gate then
+fails if admission control ever starts shedding a workload it fully
+admitted before (that *is* a serving regression).
+"""
+import argparse
+import json
+import sys
+
+import numpy as np
+
+
+def build_service():
+    from repro.data.matrices import regular_matrix, scale_free_matrix
+    from repro.engine import SpmvEngine
+    from repro.serve import AsyncSpmvService, TenantConfig
+
+    mats = {
+        "social": scale_free_matrix(96, 128, 700, seed=0),
+        "mesh": regular_matrix(96, 128, 5, seed=1),
+    }
+    service = AsyncSpmvService(
+        SpmvEngine(cache_capacity=8),
+        tenants={"tenant-a": TenantConfig(max_pending=128),
+                 "tenant-b": TenantConfig(max_pending=128)},
+    )
+    for name, a in mats.items():
+        service.register(None, name, a)  # global: both tenants share plans
+    return service, mats
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny trace for the CI perf job")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the rows as machine-readable JSON")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="trace length (default: 48 smoke / 160 full)")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="measured replays; rows are row-wise medians")
+    ap.add_argument("--seed", type=int, default=21)
+    args = ap.parse_args(argv)
+
+    from repro.serve import WorkloadSpec, generate_trace, replay
+
+    n = args.requests if args.requests is not None else (48 if args.smoke
+                                                         else 160)
+
+    import asyncio
+
+    async def measured():
+        """One warmup replay, then ``repeats`` measured replays.
+
+        Queue-drain ordering makes any single replay's percentile latencies
+        noisy (the same trace can land p50 2x apart back to back); the
+        row-wise *median over repeats* is what the gate compares.
+        """
+        service, _ = build_service()
+        spec = WorkloadSpec(
+            names=("social", "mesh"),
+            tenants=("tenant-a", "tenant-b"),
+            n_requests=n,
+            seed=args.seed,
+            zipf_alpha=1.2,
+            rate_rps=2000.0,
+            arrivals="bursty",
+            batch_mix={1: 0.85, 4: 0.1, 8: 0.05},
+        )
+        warm = generate_trace(WorkloadSpec(
+            names=spec.names, tenants=spec.tenants,
+            n_requests=max(16, n // 4), seed=args.seed + 1,
+            batch_mix=spec.batch_mix,
+        ))
+        trace = generate_trace(spec)
+        reports = []
+        async with service:
+            await replay(service, warm, time_scale=0.0)  # discarded
+            for _ in range(args.repeats):
+                service.engine.telemetry.clear()
+                reports.append(await replay(service, trace, time_scale=0.0))
+        return reports
+
+    reports = asyncio.run(measured())
+
+    def med(pick) -> float:
+        return float(np.median([pick(r) for r in reports]))
+
+    report = reports[-1]  # counters/accounting are identical across repeats
+    derived = (f"completed={report.completed}/{report.requests} "
+               f"fairness={report.fairness:.3f} repeats={len(reports)}")
+    print("name,us_per_call,derived")
+    print("# --- serve: asyncio replay SLO (2 tenants, Zipfian bursty; "
+          "median over repeats)")
+    rows = []
+
+    def row(name: str, us: float, extra: str = "") -> None:
+        rows.append({"name": name, "us_per_call": round(us, 1),
+                     "derived": extra})
+        print(f"{name},{us:.1f},{extra}")
+
+    row("serve.latency.p50", med(lambda r: r.latency["p50_ms"]) * 1e3, derived)
+    row("serve.latency.p95", med(lambda r: r.latency["p95_ms"]) * 1e3, derived)
+    row("serve.latency.p99", med(lambda r: r.latency["p99_ms"]) * 1e3, derived)
+    row("serve.latency.mean", med(lambda r: r.latency["mean_ms"]) * 1e3,
+        derived)
+    # whole-trace drain time per completed request: the throughput inverse,
+    # much steadier than any percentile (queue order cancels out)
+    row("serve.drain.us_per_req",
+        med(lambda r: r.wall_s / max(1, r.completed)) * 1e6, derived)
+    # reject-rate as permille in the us_per_call slot: 0.0 for this
+    # deadline-free workload, so any future shedding fails the gate
+    row("serve.reject.permille",
+        med(lambda r: 1000.0 * r.reject_rate),
+        f"reasons={report.reject_reasons or {}}")
+    print(f"# lost={report.lost} errors={report.errors} "
+          f"throughput={report.throughput_rps:.0f}/s")
+
+    lost = sum(r.lost for r in reports)
+    errors = sum(r.errors for r in reports)
+    if lost or errors:
+        print(f"FAIL: lost={lost} errors={errors}", file=sys.stderr)
+        return 1
+
+    if args.json:
+        doc = {
+            "version": 1,
+            "mode": "serve-smoke" if args.smoke else "serve",
+            "rows": rows,
+            "report": report.to_dict(),
+        }
+        with open(args.json, "w", encoding="utf-8") as fh:
+            json.dump(doc, fh, indent=2, sort_keys=True)
+        print(f"# wrote {args.json} ({len(rows)} rows)", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    np.random.seed(0)  # belt and braces; all real draws are generator-seeded
+    sys.exit(main())

@@ -75,6 +75,10 @@ class MicroBatcher:
         ``deadline_s`` is this request's latency budget: in background mode
         its queue is flushed no later than ``deadline_s`` after submission
         (default ``max_delay_s``).
+
+        A failed flush (the executor raising under the coalesced batch)
+        rejects the pending futures with that exception — a submitted
+        request always resolves, it never hangs.
         """
         entry = self.engine.registry.get(name)  # fail fast on unknown names
         x = np.asarray(x)
@@ -130,24 +134,33 @@ class MicroBatcher:
         return served
 
     def _run_batch(self, name: str, reqs: List[_Pending]) -> None:
-        # claim the futures up front; drop waiters that cancelled meanwhile
-        live = [p for p in reqs if p.future.set_running_or_notify_cancel()]
-        if not live:
-            return
+        """Serve one popped chunk; a popped future ALWAYS resolves.
+
+        Every failure mode — the coalesced ``engine.multiply`` raising (an
+        evicted plan, a dtype mismatch), the stacking, even result
+        distribution — lands in the waiters' futures as an exception: a
+        failed flush rejects its requests instead of hanging them, and the
+        failure can never escape into (and kill) the background flush
+        thread.
+        """
         try:
+            # claim the futures up front; drop waiters that cancelled
+            live = [p for p in reqs if p.future.set_running_or_notify_cancel()]
+            if not live:
+                return
             xs = [p.x for p in live]
             b = len(xs)
             padded = self._bucket(b)
             X = np.stack(xs + [np.zeros_like(xs[0])] * (padded - b), axis=1)
             Y = self.engine.multiply(name, X)
-        except Exception as exc:  # deliver the failure to every waiter
-            for p in live:
-                p.future.set_exception(exc)
-            return
-        self.batches_run += 1
-        self.vectors_run += b
-        for j, p in enumerate(live):
-            p.future.set_result(np.asarray(Y[:, j]))
+            self.batches_run += 1
+            self.vectors_run += b
+            for j, p in enumerate(live):
+                p.future.set_result(np.asarray(Y[:, j]))
+        except Exception as exc:  # deliver the failure to every open waiter
+            for p in reqs:
+                if not p.future.done():
+                    p.future.set_exception(exc)
 
     # ------------------------------------------------------- background mode
 
@@ -195,6 +208,8 @@ class MicroBatcher:
         self._thread.start()
 
     def stop(self, drain: bool = True) -> None:
+        """Stop the flush thread; ``drain`` serves the queues one last time,
+        ``drain=False`` cancels them — either way no future is stranded."""
         if self._thread is None:
             return
         with self._cv:
@@ -204,6 +219,13 @@ class MicroBatcher:
         self._thread = None
         if drain:
             self.flush()
+        else:
+            with self._lock:
+                leftovers = list(self._queues.values())
+                self._queues.clear()
+            for queue in leftovers:
+                for p in queue:
+                    p.future.cancel()
 
     def __enter__(self) -> "MicroBatcher":
         self.start()

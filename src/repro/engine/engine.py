@@ -52,6 +52,8 @@ class SpmvEngine:
         tuner=None,
         tune_after: int = 8,
         tune_margin: float = 0.9,
+        drift_factor: Optional[float] = 2.0,
+        drift_alpha: float = 0.25,
     ) -> None:
         """Create a serving engine over a device pool.
 
@@ -75,9 +77,15 @@ class SpmvEngine:
           tune_after: vectors a matrix must serve before refinement starts.
           tune_margin: swap only when measured best < incumbent * margin
             (guards against measurement-noise flapping).
+          drift_factor: re-tune a tuned entry when the EWMA of its served
+            batch widths drifts this factor away (either direction) from
+            the width it was tuned at — the serving-drift trigger.  None
+            disables drift re-tuning (one refinement per entry, ever).
+          drift_alpha: EWMA weight for the observed batch width.
 
         Raises:
-          ValueError: for an unknown ``impl`` or a ``tune_margin`` outside
+          ValueError: for an unknown ``impl``, a ``tune_margin`` outside
+            (0, 1], a ``drift_factor`` <= 1 or a ``drift_alpha`` outside
             (0, 1].
         """
         import jax
@@ -86,6 +94,13 @@ class SpmvEngine:
             raise ValueError(f"unknown impl {impl!r}: 'xla' or 'pallas'")
         if not 0.0 < tune_margin <= 1.0:
             raise ValueError(f"tune_margin must be in (0, 1]; got {tune_margin}")
+        if drift_factor is not None and drift_factor <= 1.0:
+            raise ValueError(
+                f"drift_factor must be > 1 (or None to disable); "
+                f"got {drift_factor}"
+            )
+        if not 0.0 < drift_alpha <= 1.0:
+            raise ValueError(f"drift_alpha must be in (0, 1]; got {drift_alpha}")
         self.impl = impl
         self.devices = list(devices) if devices is not None else jax.devices()
         self.cache = PlanCache(cache_capacity)
@@ -98,11 +113,17 @@ class SpmvEngine:
         self.tune = tune
         self.tune_after = tune_after
         self.tune_margin = tune_margin
+        self.drift_factor = drift_factor
+        self.drift_alpha = drift_alpha
         self._tuner = tuner
         self.tune_events: list = []  # refinement outcomes, append-only
         self._swap_lock = threading.Lock()  # registry/cache swap atomicity
         self._tuning: set = set()  # names with a refinement in flight
         self._tune_threads: list = []
+        # eviction spills the host-side partition to the registry entry so
+        # reactivate() re-places without re-partitioning (let alone
+        # rebuilding from dense)
+        self.cache.on_evict = self._spill_evicted
 
     # ------------------------------------------------------------------ mesh
 
@@ -127,18 +148,37 @@ class SpmvEngine:
 
     # -------------------------------------------------------------- building
 
+    def _spill_evicted(self, compiled: CompiledPlan) -> None:
+        """PlanCache eviction hook: keep the host-side PartitionedMatrix on
+        every registry entry the evicted plan was serving, so reactivation
+        replans with zero re-partitioning (the device arrays still go).
+        Iterates a snapshot: register()/unregister() may mutate the registry
+        from another thread while a background swap evicts."""
+        for entry in list(self.registry):
+            if entry.cache_key == compiled.key:
+                entry.spill = compiled.part
+
     def _build(self, sm: SparseMatrix, plan: Plan, key: PlanKey,
-               impl: str) -> CompiledPlan:
-        """Run the api chain once for ``plan`` and wrap the MeshExecutor."""
+               impl: str, part=None) -> CompiledPlan:
+        """Run the api chain once for ``plan`` and wrap the MeshExecutor.
+
+        ``part`` short-circuits host partitioning with a spilled
+        PartitionedMatrix (reactivation after eviction): the build then
+        only re-places and re-traces.
+        """
         t0 = time.perf_counter()
-        self.partition_count += 1
         if plan.partitioning == "1d":
             mesh = self._mesh((plan.grid[0],), (_AXIS_1D,))
         else:
             mesh = self._mesh(tuple(plan.grid), _AXES_2D)
-        exe = sm.plan(
+        ep = sm.plan(
             scheme=plan, mesh=mesh, impl=impl, block=self.block, hw=self.hw
-        ).compile()
+        )
+        if part is not None:
+            ep.part = part  # spilled host partition: skip re-partitioning
+        else:
+            self.partition_count += 1
+        exe = ep.compile()
         return CompiledPlan(
             key=key,
             impl=impl,
@@ -161,7 +201,7 @@ class SpmvEngine:
     def register(
         self,
         name: str,
-        a: np.ndarray,
+        a: Optional[np.ndarray] = None,
         *,
         dtype=None,
         plan: Optional[Plan] = None,
@@ -176,7 +216,11 @@ class SpmvEngine:
 
         Args:
           name: serving handle for :meth:`multiply`.
-          a: dense host matrix (2D).
+          a: dense host matrix (2D) — or None to re-register ``name`` from
+            the host-side SparseMatrix the registry kept (the spill-cache
+            path: stats, fingerprint and containers are already cached, so
+            nothing is rebuilt from dense; an eviction-spilled partition
+            additionally skips re-partitioning).
           dtype: optionally convert values before planning.
           plan: explicit adaptive.Plan override (still fitted to the pool).
           partitioning: force "1d"/"2d" over the adaptive choice.
@@ -191,50 +235,67 @@ class SpmvEngine:
           The RegisteredMatrix registry entry.
 
         Raises:
-          ValueError: for a non-2D matrix or unknown ``impl``.
+          ValueError: for a non-2D matrix, an unknown ``impl``, or ``a=None``
+            without a prior registration holding the host-side matrix.
         """
-        a = np.asarray(a)
-        if dtype is not None:
-            a = a.astype(dtype)
-        if a.ndim != 2:
-            raise ValueError(f"expected a 2D matrix, got shape {a.shape}")
+        prior = self.registry.find(name)
+        if a is None:
+            if prior is None or prior.matrix is None:
+                raise ValueError(
+                    f"register({name!r}) without a matrix needs a prior "
+                    "registration holding its host-side SparseMatrix"
+                )
+            sm = prior.matrix
+            if dtype is not None and np.dtype(dtype) != sm.dtype:
+                sm = SparseMatrix.from_dense(
+                    sm.dense().astype(dtype), stats_block=self.block
+                )
+        else:
+            a = np.asarray(a)
+            if dtype is not None:
+                a = a.astype(dtype)
+            if a.ndim != 2:
+                raise ValueError(f"expected a 2D matrix, got shape {a.shape}")
+            sm = SparseMatrix.from_dense(a, stats_block=self.block)
         impl = self.impl if impl is None else impl
         if impl not in ("xla", "pallas"):
             raise ValueError(f"unknown impl {impl!r}: 'xla' or 'pallas'")
-        sm = SparseMatrix.from_dense(a, stats_block=self.block)
         plan = resolve_scheme(
-            sm.stats, a.shape, self.n_devices,
+            sm.stats, sm.shape, self.n_devices,
             plan if plan is not None else "auto",
             hw=self.hw, partitioning=partitioning, block=self.block,
         )
         fp = sm.fingerprint()
         scheme_id = plan.tag
-        key: PlanKey = (fp, tuple(plan.grid), np.dtype(a.dtype).str, scheme_id,
+        key: PlanKey = (fp, tuple(plan.grid), sm.dtype.str, scheme_id,
                         impl)
         with self._swap_lock:
             compiled = self.cache.get(key)
         if compiled is None:
-            compiled = self._build(sm, plan, key, impl)
+            # an eviction-spilled partition for this exact plan identity
+            # short-circuits host partitioning
+            part = (prior.spill
+                    if prior is not None and prior.cache_key == key else None)
+            compiled = self._build(sm, plan, key, impl, part=part)
             with self._swap_lock:
                 self.cache.put(compiled)
         entry = RegisteredMatrix(
             name=name,
             fingerprint=fp,
-            shape=a.shape,
-            dtype=np.dtype(a.dtype).str,
+            shape=sm.shape,
+            dtype=sm.dtype.str,
             stats=sm.stats,
             plan=compiled.plan,
             cache_key=key,
-            matrix=sm,  # host-side; lets the background tuner re-plan
+            matrix=sm,  # host-side; lets the tuner + reactivation re-plan
         )
         # overwriting a name must not strand the old plan in the cache
-        old = self.registry.find(name)
         self.registry.add(entry)
-        if old is not None and old.cache_key != key and not any(
-            e.cache_key == old.cache_key for e in self.registry
+        if prior is not None and prior.cache_key != key and not any(
+            e.cache_key == prior.cache_key for e in self.registry
         ):
             with self._swap_lock:
-                self.cache.evict(old.cache_key)
+                self.cache.evict(prior.cache_key)
         if warmup:
             compiled.executor.warmup()
         return entry
@@ -247,9 +308,53 @@ class SpmvEngine:
         if compiled is None:
             raise RuntimeError(
                 f"plan for {entry.name!r} was evicted from the cache; "
-                "re-register the matrix (or grow cache_capacity)"
+                f"reactivate({entry.name!r}) rebuilds it from the host-side "
+                "spill (or grow cache_capacity)"
             )
         return compiled
+
+    def reactivate(self, name: str, warmup: bool = True) -> RegisteredMatrix:
+        """Rebuild the compiled plan for an evicted entry — cheaply.
+
+        The registry keeps each entry's host-side ``SparseMatrix`` (stats,
+        fingerprint, containers all cached) and, after an eviction, the
+        spilled ``PartitionedMatrix``; reactivation therefore only re-places
+        the partitions on the mesh and re-traces — no dense rebuild, no
+        re-partitioning.  A no-op when the plan is still cached.
+
+        Args:
+          name: a registered matrix whose plan may have been evicted.
+          warmup: trace the vector-shaped program now (off the request path).
+
+        Returns:
+          The (unchanged) registry entry, its plan compiled again.
+
+        Raises:
+          KeyError: unknown ``name``.
+          ValueError: the entry predates spill support and has no host-side
+            matrix to rebuild from.
+        """
+        entry = self.registry.get(name)
+        with self._swap_lock:
+            if self.cache.get(entry.cache_key) is not None:
+                return entry  # still live; nothing to do
+        if entry.matrix is None:
+            raise ValueError(
+                f"{name!r} carries no host-side SparseMatrix to reactivate "
+                "from; re-register it with the dense matrix"
+            )
+        built = self._build(entry.matrix, entry.plan, entry.cache_key,
+                            entry.cache_key[4], part=entry.spill)
+        with self._swap_lock:
+            if self.cache.peek(entry.cache_key) is not None:
+                built.release()  # lost a race; the cached build wins
+                self.cache.get(entry.cache_key)
+            else:
+                self.cache.put(built)
+        entry.spill = None  # the live CompiledPlan owns the partition again
+        if warmup:
+            self.plan_for(name).executor.warmup()
+        return entry
 
     def multiply(self, name: str, x) -> np.ndarray:
         """y = A @ x for registered ``name``.
@@ -297,8 +402,18 @@ class SpmvEngine:
             cache_hit=warm,
             traced=cp.trace_count > traces_before,
         ))
-        if self.tune and not entry.tuned:
-            self._maybe_refine(entry, x)
+        if self.tune:
+            entry.batch_ewma = (
+                float(batch) if entry.batch_ewma is None
+                else (1.0 - self.drift_alpha) * entry.batch_ewma
+                + self.drift_alpha * batch
+            )
+            if entry.tuned and self._batch_drifted(entry):
+                # the serving batch width left the regime the last tuning
+                # measured: re-qualify the entry for a background re-tune
+                entry.tuned = False
+            if not entry.tuned:
+                self._maybe_refine(entry, x)
         return y
 
     # --------------------------------------------------- measure-and-refine
@@ -314,13 +429,24 @@ class SpmvEngine:
             )
         return self._tuner
 
+    def _batch_drifted(self, entry: RegisteredMatrix) -> bool:
+        """Has the served batch width drifted drift_factor x away (either
+        direction) from the width the entry was last tuned at?"""
+        if self.drift_factor is None or entry.tuned_batch is None \
+                or entry.batch_ewma is None:
+            return False
+        hi = max(entry.batch_ewma, entry.tuned_batch)
+        lo = max(1e-9, min(entry.batch_ewma, entry.tuned_batch))
+        return hi / lo >= self.drift_factor
+
     def _maybe_refine(self, entry: RegisteredMatrix, x) -> None:
         """Kick one background refinement per entry once traffic qualifies."""
         if entry.tuned or entry.requests < self.tune_after \
                 or entry.name in self._tuning:  # unlocked fast path
             return
+        trigger = "drift" if entry.tuned_batch is not None else "traffic"
         thread = threading.Thread(
-            target=self._refine_bg, args=(entry.name,),
+            target=self._refine_bg, args=(entry.name, trigger),
             name=f"spmv-tune-{entry.name}", daemon=True,
         )
         with self._swap_lock:
@@ -337,24 +463,28 @@ class SpmvEngine:
         entry.last_x = np.array(x)
         thread.start()
 
-    def _refine_bg(self, name: str) -> None:
+    def _refine_bg(self, name: str, trigger: str = "traffic") -> None:
         try:
-            self.refine(name)
+            self.refine(name, trigger=trigger)
         except Exception as e:  # background thread: record, never propagate
             self.tune_events.append({
-                "name": name, "swapped": False,
+                "name": name, "swapped": False, "trigger": trigger,
                 "error": f"{type(e).__name__}: {e}",
             })
             # one shot per entry, success or not: a persistently failing
             # refinement must not re-spawn (and re-compile every candidate)
-            # on each subsequent request
+            # on each subsequent request — which requires disarming the
+            # drift trigger too, by anchoring tuned_batch at the width that
+            # failed (only a NEW drift regime re-arms it, once)
             entry = self.registry.find(name)
             if entry is not None:
                 entry.tuned = True
+                if entry.batch_ewma is not None:
+                    entry.tuned_batch = entry.batch_ewma
         finally:
             self._tuning.discard(name)
 
-    def refine(self, name: str, x=None) -> dict:
+    def refine(self, name: str, x=None, trigger: str = "manual") -> dict:
         """Measure candidate plans for ``name`` and swap in a faster one.
 
         The incumbent plan is always among the measured candidates, so the
@@ -371,6 +501,9 @@ class SpmvEngine:
         Args:
           name: a registered matrix.
           x: representative input override, (cols,) or (cols, B).
+          trigger: provenance recorded on the tune event — "manual",
+            "traffic" (first qualification) or "drift" (batch-width
+            re-tune).
 
         Returns:
           The tune event dict (also appended to ``self.tune_events``):
@@ -404,6 +537,8 @@ class SpmvEngine:
         best, incumbent = result.best_measurement, result.baseline
         event = {
             "name": name,
+            "trigger": trigger,
+            "batch": batch,
             "incumbent": incumbent.scheme_id,
             "incumbent_s": incumbent.mean_s,
             "winner": best.scheme_id,
@@ -444,6 +579,14 @@ class SpmvEngine:
                         self.cache.put(built)
                 event["swapped"] = True
         entry.tuned = True
+        # anchor the drift detector at the *observed width EWMA*, not the
+        # width of the one representative request: under a stationary
+        # mixed-width stream (ewma ~2.5, coalesced batches of 1 or 8) a
+        # per-request anchor would re-trigger drift forever; only a real
+        # shift of the traffic mix should re-arm _batch_drifted
+        entry.tuned_batch = (entry.batch_ewma if entry.batch_ewma is not None
+                             else (float(batch) if batch else 1.0))
+        entry.batch_ewma = entry.tuned_batch
         self.tune_events.append(event)
         return event
 

@@ -108,6 +108,16 @@ class PlanCache:
         self._hits = 0
         self._misses = 0
         self._evictions = 0
+        # called with each CompiledPlan right before its device arrays are
+        # released on eviction (LRU overflow, explicit evict, clear) — the
+        # engine uses it to spill the host-side partition to the registry so
+        # reactivation skips re-partitioning.  Must not raise.
+        self.on_evict: Optional[Callable[[CompiledPlan], None]] = None
+
+    def _release(self, entry: CompiledPlan) -> None:
+        if self.on_evict is not None:
+            self.on_evict(entry)
+        entry.release()
 
     def get(self, key: PlanKey) -> Optional[CompiledPlan]:
         entry = self._entries.get(key)
@@ -129,7 +139,7 @@ class PlanCache:
         if len(self._entries) > self.capacity:
             _, evicted = self._entries.popitem(last=False)
             self._evictions += 1
-            evicted.release()
+            self._release(evicted)
             return evicted
         return None
 
@@ -137,12 +147,12 @@ class PlanCache:
         entry = self._entries.pop(key, None)
         if entry is not None:
             self._evictions += 1
-            entry.release()
+            self._release(entry)
         return entry
 
     def clear(self) -> None:
         for entry in self._entries.values():
-            entry.release()
+            self._release(entry)
         self._entries.clear()
 
     def __contains__(self, key: PlanKey) -> bool:

@@ -37,6 +37,13 @@ class RegisteredMatrix:
     tuned: bool = False  # a measure-and-refine pass completed for this entry
     last_x: Optional[object] = None  # most recent input (representative
     # traffic the tuner measures candidates on)
+    spill: Optional[object] = None  # host-side PartitionedMatrix kept at
+    # plan-cache eviction, so reactivation re-places without re-partitioning
+    # (let alone rebuilding from dense)
+    tuned_batch: Optional[float] = None  # batch width the last refinement
+    # measured at (the drift re-tune reference point)
+    batch_ewma: Optional[float] = None  # EWMA of served batch widths; when
+    # it drifts drift_factor x away from tuned_batch, the engine re-tunes
 
 
 class MatrixRegistry:

@@ -52,10 +52,18 @@ class Telemetry:
         self._keep = keep_records
         self.records: List[RequestRecord] = []
         self._by_name: Dict[str, _Agg] = {}
+        self._last: Dict[str, RequestRecord] = {}
+
+    def last(self, name: str) -> Optional[RequestRecord]:
+        """The most recent record for ``name`` (None before the first
+        request) — O(1); the serving layer's service-time estimator reads
+        it on every request."""
+        return self._last.get(name)
 
     def record(self, rec: RequestRecord) -> None:
         if self._keep:
             self.records.append(rec)
+        self._last[rec.name] = rec
         agg = self._by_name.setdefault(rec.name, _Agg())
         agg.requests += 1
         agg.vectors += rec.batch
@@ -89,3 +97,4 @@ class Telemetry:
     def clear(self) -> None:
         self.records.clear()
         self._by_name.clear()
+        self._last.clear()

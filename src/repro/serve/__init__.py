@@ -1,0 +1,59 @@
+"""repro.serve — asyncio multi-tenant SpMV serving with admission control.
+
+The paper's end-to-end claim is SpMV *at scale* — thousands of PIM cores
+behind real traffic.  :mod:`repro.engine` amortizes the per-matrix costs;
+this package is the front door that turns it into a servable system:
+
+  * :mod:`service`   — ``AsyncSpmvService``: ``await multiply(tenant, name,
+                       x, deadline_s=...)`` bridging the MicroBatcher onto
+                       the event loop, with ``drain()``/``aclose()``
+  * :mod:`admission` — per-tenant bounded pending queues, token-bucket rate
+                       limits, deadline-based load shedding
+                       (``RequestRejected`` with a machine-readable reason)
+  * :mod:`workload`  — seeded synthetic traffic: Zipfian matrix popularity,
+                       Poisson/bursty arrivals, mixed vector/batch requests
+  * :mod:`replay`    — fire a trace at a service and score it: p50/p95/p99,
+                       reject rate, fairness, zero-loss accounting, Fig.-17
+                       phase splits, dense-oracle verification
+
+Quickstart: ``examples/serve_quickstart.py``; knobs + report fields:
+``docs/serving.md``.
+"""
+
+from .admission import (
+    REJECT_REASONS,
+    AdmissionController,
+    RequestRejected,
+    TenantConfig,
+    TenantState,
+    TokenBucket,
+)
+from .replay import SLOReport, replay, replay_sync
+from .service import AsyncSpmvService
+from .workload import (
+    ServeRequest,
+    WorkloadSpec,
+    describe_trace,
+    generate_trace,
+    popularity,
+    request_vector,
+)
+
+__all__ = [
+    "AsyncSpmvService",
+    "AdmissionController",
+    "TenantConfig",
+    "TenantState",
+    "TokenBucket",
+    "RequestRejected",
+    "REJECT_REASONS",
+    "WorkloadSpec",
+    "ServeRequest",
+    "generate_trace",
+    "request_vector",
+    "popularity",
+    "describe_trace",
+    "SLOReport",
+    "replay",
+    "replay_sync",
+]

@@ -1,0 +1,287 @@
+"""Trace replay against an AsyncSpmvService, with an SLO report.
+
+The replayer is the serving layer's measurement harness: it fires a
+:mod:`~repro.serve.workload` trace at a service with faithful arrival
+timing (optionally compressed), awaits every request, and folds the
+outcomes into one :class:`SLOReport` — the numbers a serving PR should move
+and a correctness PR must not:
+
+  * latency percentiles (p50/p95/p99) and mean over completed requests,
+  * reject rate, split by admission reason per tenant,
+  * **zero-loss accounting**: every trace request must end *resolved* —
+    completed, rejected, or errored; ``lost`` counts the remainder and a
+    correct service reports 0,
+  * late-service accounting: completions past their deadline (``late``) and
+    infeasible requests that were served instead of shed
+    (``infeasible_served``) — both must be 0 for SLO-honest serving,
+  * per-tenant fairness (Jain's index over completed vectors),
+  * the paper's Fig.-17 load/kernel/retrieve split, aggregated from the
+    engine's :class:`~repro.engine.telemetry.Telemetry`,
+  * optional oracle verification: with ``oracles={name: dense}`` every
+    completed y is compared against ``a @ x`` — max |err| always, and a
+    bit-equality count for integer-valued workloads.
+"""
+
+from __future__ import annotations
+
+import asyncio
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+from .admission import RequestRejected
+from .workload import ServeRequest, request_vector
+
+__all__ = ["SLOReport", "replay", "replay_sync"]
+
+
+def _percentiles(lat_s: Sequence[float]) -> dict:
+    if not lat_s:
+        return {"p50_ms": 0.0, "p95_ms": 0.0, "p99_ms": 0.0, "mean_ms": 0.0}
+    arr = np.asarray(lat_s, dtype=np.float64) * 1e3
+    return {
+        "p50_ms": float(np.percentile(arr, 50)),
+        "p95_ms": float(np.percentile(arr, 95)),
+        "p99_ms": float(np.percentile(arr, 99)),
+        "mean_ms": float(arr.mean()),
+    }
+
+
+def _jain(values: Sequence[float]) -> float:
+    """Jain's fairness index: 1.0 = perfectly even, 1/n = one tenant owns
+    everything.  Defined over per-tenant completed vectors."""
+    v = np.asarray([x for x in values], dtype=np.float64)
+    if v.size == 0 or v.sum() <= 0:
+        return 1.0
+    return float(v.sum() ** 2 / (v.size * (v**2).sum()))
+
+
+@dataclass
+class SLOReport:
+    """Everything the replay observed, one serving scorecard."""
+
+    requests: int = 0
+    completed: int = 0
+    rejected: int = 0
+    errors: int = 0
+    lost: int = 0  # unresolved requests — MUST be 0 for a correct service
+    late: int = 0  # completed after their deadline (SLO miss)
+    infeasible_served: int = 0  # should-have-shed requests served anyway
+    infeasible_rejected: int = 0
+    reject_reasons: Dict[str, int] = field(default_factory=dict)
+    latency: dict = field(default_factory=dict)  # p50/p95/p99/mean (ms)
+    per_tenant: Dict[str, dict] = field(default_factory=dict)
+    fairness: float = 1.0  # Jain's index over per-tenant completed vectors
+    phases: dict = field(default_factory=dict)  # Fig.-17 load/kernel/retrieve
+    wall_s: float = 0.0
+    verified: int = 0  # completions compared against the dense oracle
+    bitexact: int = 0  # of those, bit-identical results
+    max_abs_err: float = 0.0
+
+    @property
+    def reject_rate(self) -> float:
+        return self.rejected / self.requests if self.requests else 0.0
+
+    @property
+    def throughput_rps(self) -> float:
+        return self.completed / self.wall_s if self.wall_s > 0 else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "requests": self.requests,
+            "completed": self.completed,
+            "rejected": self.rejected,
+            "reject_rate": self.reject_rate,
+            "reject_reasons": dict(self.reject_reasons),
+            "errors": self.errors,
+            "lost": self.lost,
+            "late": self.late,
+            "infeasible_served": self.infeasible_served,
+            "infeasible_rejected": self.infeasible_rejected,
+            "latency": dict(self.latency),
+            "per_tenant": {t: dict(d) for t, d in self.per_tenant.items()},
+            "fairness": self.fairness,
+            "phases": dict(self.phases),
+            "wall_s": self.wall_s,
+            "throughput_rps": self.throughput_rps,
+            "verified": self.verified,
+            "bitexact": self.bitexact,
+            "max_abs_err": self.max_abs_err,
+        }
+
+    def describe(self) -> str:
+        lat = self.latency or _percentiles(())
+        lines = [
+            f"SLO report: {self.requests} requests in {self.wall_s:.2f}s "
+            f"({self.throughput_rps:.0f} done/s)",
+            f"  completed={self.completed} rejected={self.rejected} "
+            f"({100 * self.reject_rate:.1f}%) errors={self.errors} "
+            f"lost={self.lost}",
+            f"  latency ms: p50={lat['p50_ms']:.2f} p95={lat['p95_ms']:.2f} "
+            f"p99={lat['p99_ms']:.2f} mean={lat['mean_ms']:.2f}",
+            f"  deadlines: late={self.late} "
+            f"infeasible served={self.infeasible_served} "
+            f"shed={self.infeasible_rejected}",
+            f"  fairness (Jain over tenant vectors): {self.fairness:.3f}",
+        ]
+        if self.reject_reasons:
+            reasons = " ".join(f"{k}={v}" for k, v in
+                               sorted(self.reject_reasons.items()) if v)
+            lines.append(f"  reject reasons: {reasons or 'none'}")
+        for tenant in sorted(self.per_tenant):
+            d = self.per_tenant[tenant]
+            lines.append(
+                f"  {tenant}: completed={d['completed']} "
+                f"rejected={d['rejected']} vectors={d['vectors']} "
+                f"p99={d['p99_ms']:.2f}ms"
+            )
+        if self.phases:
+            lines.append(
+                f"  phase split (Fig. 17): load={self.phases['load']:.2f} "
+                f"kernel={self.phases['kernel']:.2f} "
+                f"retrieve={self.phases['retrieve']:.2f}"
+            )
+        if self.verified:
+            lines.append(
+                f"  oracle: {self.verified} verified, {self.bitexact} "
+                f"bit-exact, max|err|={self.max_abs_err:.2e}"
+            )
+        return "\n".join(lines)
+
+
+def _aggregate_phases(telemetry) -> dict:
+    """Total_s-weighted Fig.-17 split across every matrix the engine served."""
+    total = load = kernel = retrieve = 0.0
+    for bd in telemetry.breakdown().values():
+        total += bd["total_s"]
+        load += bd["load"] * bd["total_s"]
+        kernel += bd["kernel"] * bd["total_s"]
+        retrieve += bd["retrieve"] * bd["total_s"]
+    if total <= 0:
+        return {}
+    return {"load": load / total, "kernel": kernel / total,
+            "retrieve": retrieve / total, "total_s": total}
+
+
+async def replay(
+    service,
+    trace: Sequence[ServeRequest],
+    *,
+    oracles: Optional[Dict[str, np.ndarray]] = None,
+    time_scale: float = 1.0,
+    integer_values: bool = False,
+    dtype=np.float32,
+) -> SLOReport:
+    """Fire ``trace`` at ``service`` with scaled arrival timing; await all.
+
+    Args:
+      service: a started :class:`~repro.serve.service.AsyncSpmvService`.
+      trace: :func:`~repro.serve.workload.generate_trace` output (or any
+        ServeRequest sequence sorted by ``t``).
+      oracles: {matrix name: dense host array} — verify every completion
+        against ``a @ x`` (max |err| + bit-equality count).
+      time_scale: arrival-time multiplier; 1.0 replays in real time, 0.0
+        fires as fast as the loop allows (keeps order, drops gaps).
+      integer_values: the workload's payload mode (must match the spec the
+        trace came from for oracle bit-equality to be meaningful).
+      dtype: payload dtype.
+
+    Returns:
+      The :class:`SLOReport`; ``report.lost == 0`` is the zero-loss check.
+    """
+    loop = asyncio.get_running_loop()
+    if oracles is not None:  # convert once, not per completed request
+        oracles = {k: np.asarray(v, dtype=dtype) for k, v in oracles.items()}
+    resolved: Dict[int, str] = {}  # outcomes by trace index
+    latencies: list = []
+    per_tenant: Dict[str, dict] = {}
+    report = SLOReport(requests=len(trace))
+    reasons: Dict[str, int] = {}
+
+    def tstate(tenant: str) -> dict:
+        return per_tenant.setdefault(tenant, {
+            "completed": 0, "rejected": 0, "errors": 0, "vectors": 0,
+            "latencies": [],
+        })
+
+    async def fire(i: int, req: ServeRequest, x: np.ndarray) -> None:
+        ts = tstate(req.tenant)
+        t0 = loop.time()
+        try:
+            y = await service.multiply(
+                req.tenant, req.name, x, deadline_s=req.deadline_s
+            )
+        except RequestRejected as rej:
+            resolved[i] = "rejected"
+            ts["rejected"] += 1
+            reasons[rej.reason] = reasons.get(rej.reason, 0) + 1
+            if req.infeasible:
+                report.infeasible_rejected += 1
+            return
+        except Exception:
+            resolved[i] = "error"
+            ts["errors"] += 1
+            return
+        latency = loop.time() - t0
+        resolved[i] = "completed"
+        latencies.append(latency)
+        ts["completed"] += 1
+        ts["vectors"] += req.batch
+        ts["latencies"].append(latency)
+        if req.infeasible:
+            report.infeasible_served += 1
+        if req.deadline_s is not None and latency > req.deadline_s:
+            report.late += 1
+        if oracles is not None and req.name in oracles:
+            expect = oracles[req.name] @ x
+            report.verified += 1
+            err = float(np.max(np.abs(np.asarray(y) - expect))) if y.size else 0.0
+            report.max_abs_err = max(report.max_abs_err, err)
+            if np.array_equal(np.asarray(y), expect):
+                report.bitexact += 1
+
+    start = loop.time()
+    tasks = []
+    for i, req in enumerate(trace):
+        if time_scale > 0:
+            delay = start + req.t * time_scale - loop.time()
+            if delay > 0:
+                await asyncio.sleep(delay)
+        else:
+            await asyncio.sleep(0)  # keep arrival order, drop the gaps
+        entry = service.engine.registry.get(service.resolve(req.tenant, req.name))
+        x = request_vector(req, entry.shape[1], dtype=dtype,
+                           integer=integer_values)
+        tasks.append(asyncio.ensure_future(fire(i, req, x)))
+    await asyncio.gather(*tasks)
+    await service.drain()
+    report.wall_s = loop.time() - start
+
+    report.completed = sum(1 for v in resolved.values() if v == "completed")
+    report.rejected = sum(1 for v in resolved.values() if v == "rejected")
+    report.errors = sum(1 for v in resolved.values() if v == "error")
+    report.lost = len(trace) - len(resolved)
+    report.reject_reasons = reasons
+    report.latency = _percentiles(latencies)
+    for tenant, ts in per_tenant.items():
+        stats = _percentiles(ts.pop("latencies"))
+        ts.update(stats)
+    report.per_tenant = per_tenant
+    report.fairness = _jain([d["vectors"] for d in per_tenant.values()])
+    report.phases = _aggregate_phases(service.engine.telemetry)
+    return report
+
+
+def replay_sync(service, trace, **kwargs) -> SLOReport:
+    """One-shot convenience: start the service, replay, drain, close.
+
+    Runs its own event loop — use from scripts/benchmarks, not from async
+    code (there, ``await replay(...)`` directly).
+    """
+
+    async def _run():
+        async with service:
+            return await replay(service, trace, **kwargs)
+
+    return asyncio.run(_run())

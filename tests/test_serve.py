@@ -1,0 +1,627 @@
+"""repro.serve — asyncio front end, admission control, workload + replay.
+
+The asyncio paths run inside ``asyncio.run`` from plain pytest functions
+(no pytest-asyncio dependency).  Correctness is always against the dense
+oracle; determinism against re-generated traces; isolation/shedding against
+the admission counters.
+"""
+
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.data.matrices import regular_matrix, scale_free_matrix
+from repro.engine import MicroBatcher, SpmvEngine
+from repro.serve import (
+    AdmissionController,
+    AsyncSpmvService,
+    RequestRejected,
+    TenantConfig,
+    TokenBucket,
+    WorkloadSpec,
+    describe_trace,
+    generate_trace,
+    replay,
+    replay_sync,
+    request_vector,
+)
+
+
+def _mats():
+    return {
+        "reg": regular_matrix(64, 96, 5, seed=1),
+        "sf": scale_free_matrix(64, 96, 400, seed=2),
+    }
+
+
+def _service(**kwargs) -> AsyncSpmvService:
+    svc = AsyncSpmvService(SpmvEngine(cache_capacity=8), **kwargs)
+    for name, a in _mats().items():
+        svc.register(None, name, a)  # global: every tenant may multiply
+    return svc
+
+
+def run(coro):
+    return asyncio.run(coro)
+
+
+# ------------------------------------------------------------------ serving
+
+
+def test_async_roundtrip_matches_oracle():
+    mats = _mats()
+    svc = _service()
+
+    async def main():
+        async with svc:
+            rng = np.random.default_rng(0)
+            x = rng.standard_normal(96).astype(np.float32)
+            y = await svc.multiply("t1", "reg", x)
+            np.testing.assert_allclose(y, mats["reg"] @ x, rtol=1e-3, atol=1e-4)
+            X = rng.standard_normal((96, 4)).astype(np.float32)
+            Y = await svc.multiply("t2", "sf", X)  # explicit batch request
+            np.testing.assert_allclose(Y, mats["sf"] @ X, rtol=1e-3, atol=1e-4)
+
+    run(main())
+    assert svc.served == 2 and svc.errors == 0
+
+
+def test_concurrent_awaits_coalesce_into_spmm():
+    mats = _mats()
+    svc = _service(max_batch=8, buckets=(1, 2, 4, 8))
+
+    async def main():
+        async with svc:
+            rng = np.random.default_rng(1)
+            vecs = [rng.standard_normal(96).astype(np.float32)
+                    for _ in range(6)]
+            results = await asyncio.gather(
+                *[svc.multiply("t", "reg", v) for v in vecs]
+            )
+            for y, v in zip(results, vecs):
+                np.testing.assert_allclose(y, mats["reg"] @ v,
+                                           rtol=1e-3, atol=1e-4)
+
+    run(main())
+    # 6 concurrent requests must not become 6 single-vector SpMVs
+    assert svc.batcher.vectors_run == 6
+    assert svc.batcher.batches_run < 6
+
+
+def test_tenant_scoped_registration_resolves_before_global():
+    mats = _mats()
+    svc = _service()
+    scaled = mats["reg"] * 2.0
+    svc.register("t1", "reg", scaled)  # t1's private "reg"
+
+    async def main():
+        async with svc:
+            x = np.ones(96, np.float32)
+            y1 = await svc.multiply("t1", "reg", x)  # scoped entry wins
+            y2 = await svc.multiply("t2", "reg", x)  # falls back to global
+            np.testing.assert_allclose(y1, scaled @ x, rtol=1e-3, atol=1e-4)
+            np.testing.assert_allclose(y2, mats["reg"] @ x, rtol=1e-3, atol=1e-4)
+
+    run(main())
+
+
+def test_unknown_matrix_and_bad_shape():
+    svc = _service()
+
+    async def main():
+        async with svc:
+            with pytest.raises(KeyError, match="neither"):
+                await svc.multiply("t", "nope", np.zeros(96, np.float32))
+            with pytest.raises(ValueError, match="cols"):
+                await svc.multiply("t", "reg", np.zeros(7, np.float32))
+
+    run(main())
+
+
+# ----------------------------------------------------------- load shedding
+
+
+def test_expired_deadline_is_shed_not_served():
+    svc = _service()
+
+    async def main():
+        async with svc:
+            with pytest.raises(RequestRejected) as exc:
+                await svc.multiply("t", "reg", np.zeros(96, np.float32),
+                                   deadline_s=0.0)
+            assert exc.value.reason == "deadline_infeasible"
+
+    run(main())
+    assert svc.stats()["tenants"]["t"]["rejected"]["deadline_infeasible"] == 1
+    assert svc.served == 0
+
+
+def test_infeasible_deadline_shed_against_observed_estimate():
+    svc = _service()
+
+    async def main():
+        async with svc:
+            x = np.zeros(96, np.float32)
+            for _ in range(3):  # warm the service-time estimate
+                await svc.multiply("t", "reg", x)
+            est = svc.estimate(None, "reg")
+            assert est is not None and est > 0
+            # far below the observed service time -> shed up front
+            with pytest.raises(RequestRejected) as exc:
+                await svc.multiply("t", "reg", x, deadline_s=est * 1e-6)
+            assert exc.value.reason == "deadline_infeasible"
+            # a generous deadline still serves
+            y = await svc.multiply("t", "reg", x, deadline_s=60.0)
+            assert y.shape == (64,)
+
+    run(main())
+
+
+def test_per_tenant_queue_isolation_under_overload():
+    # the noisy tenant's bound is 2; a huge flush deadline keeps its
+    # requests pending in the batcher so the bound actually binds
+    mats = _mats()
+    svc = _service(
+        tenants={"noisy": TenantConfig(max_pending=2),
+                 "quiet": TenantConfig(max_pending=8)},
+        max_batch=8, max_delay_s=30.0,
+    )
+
+    async def main():
+        async with svc:
+            x = np.ones(96, np.float32)
+            noisy = [asyncio.ensure_future(svc.multiply("noisy", "reg", x))
+                     for _ in range(5)]
+            for _ in range(10):  # let the tasks reach their await points
+                await asyncio.sleep(0)
+            snap = svc.admission.snapshot()
+            assert snap["noisy"]["pending"] == 2
+            assert snap["noisy"]["rejected"]["queue_full"] == 3
+            # the quiet tenant is untouched by the noisy tenant's overload
+            quiet = [asyncio.ensure_future(svc.multiply("quiet", "reg", x))
+                     for _ in range(3)]
+            for _ in range(10):
+                await asyncio.sleep(0)
+            assert svc.admission.snapshot()["quiet"]["rejected_total"] == 0
+            await svc.drain()
+            outcomes = await asyncio.gather(*noisy, *quiet,
+                                            return_exceptions=True)
+            served = [y for y in outcomes if isinstance(y, np.ndarray)]
+            shed = [e for e in outcomes if isinstance(e, RequestRejected)]
+            assert len(served) == 5 and len(shed) == 3
+            for y in served:
+                np.testing.assert_allclose(y, mats["reg"] @ x,
+                                           rtol=1e-3, atol=1e-4)
+
+    run(main())
+
+
+def test_rate_limit_spends_tokens_per_vector():
+    svc = _service(
+        tenants={"t": TenantConfig(rate_rps=1e-3, burst=5)},  # ~no refill
+    )
+
+    async def main():
+        async with svc:
+            X = np.zeros((96, 4), np.float32)
+            await svc.multiply("t", "reg", X)  # 4 tokens of 5
+            with pytest.raises(RequestRejected) as exc:
+                await svc.multiply("t", "reg", X)  # needs 4, 1 left
+            assert exc.value.reason == "rate_limited"
+            # a single vector still fits the remaining token
+            y = await svc.multiply("t", "reg", np.zeros(96, np.float32))
+            assert y.shape == (64,)
+
+    run(main())
+
+
+def test_generous_deadline_does_not_extend_the_coalescing_wait():
+    """A deadline may only shorten the batcher hold, never extend it: an
+    idle service must answer a 10s-SLO request at service speed."""
+    svc = _service(max_delay_s=0.005)
+
+    async def main():
+        async with svc:
+            x = np.zeros(96, np.float32)
+            await svc.multiply("t", "reg", x)  # absorb compile/trace costs
+            loop = asyncio.get_running_loop()
+            t0 = loop.time()
+            await svc.multiply("t", "reg", x, deadline_s=10.0)
+            return loop.time() - t0
+
+    latency = run(main())
+    assert latency < 2.0  # nowhere near deadline/2 = 5s
+
+
+def test_estimate_is_service_time_not_end_to_end_latency():
+    """The shedding estimate must track the engine's load+kernel+retrieve
+    (compile outliers skipped), so a feasible tight-SLO request after warm
+    traffic is admitted, not rejected off an inflated EWMA."""
+    svc = _service()
+
+    async def main():
+        async with svc:
+            x = np.zeros(96, np.float32)
+            for _ in range(3):
+                await svc.multiply("t", "reg", x)
+            est = svc.estimate(None, "reg")
+            assert est is not None and est < 0.5  # ms-scale service time
+            y = await svc.multiply("t", "reg", x, deadline_s=1.0)
+            assert y.shape == (64,)
+
+    run(main())
+    assert svc.stats()["tenants"]["t"]["rejected"]["deadline_infeasible"] == 0
+
+
+# ------------------------------------------------------- lifecycle / drain
+
+
+def test_drain_resolves_all_inflight_requests():
+    svc = _service(max_batch=8, max_delay_s=30.0)  # nothing flushes on time
+
+    async def main():
+        async with svc:
+            x = np.ones(96, np.float32)
+            futs = [asyncio.ensure_future(svc.multiply("t", "reg", x))
+                    for _ in range(5)]
+            for _ in range(10):
+                await asyncio.sleep(0)
+            assert svc.batcher.pending() > 0  # genuinely in flight
+            await svc.drain()
+            assert all(f.done() for f in futs)
+            assert svc.batcher.pending() == 0
+            await asyncio.gather(*futs)
+
+    run(main())
+    assert svc.served == 5
+
+
+def test_multiply_on_never_started_service_lazily_starts():
+    """Without `async with`/start(), a sub-max_batch queue has no flush
+    thread — multiply() must lazily start it rather than hang forever."""
+    mats = _mats()
+    svc = _service(max_batch=8)  # 1 request << max_batch: needs the thread
+
+    async def main():
+        x = np.ones(96, np.float32)
+        y = await asyncio.wait_for(svc.multiply("t", "reg", x), timeout=30)
+        np.testing.assert_allclose(y, mats["reg"] @ x, rtol=1e-3, atol=1e-4)
+        await svc.aclose()
+
+    run(main())
+
+
+def test_closed_service_rejects_with_shutdown():
+    svc = _service()
+
+    async def main():
+        async with svc:
+            await svc.multiply("t", "reg", np.zeros(96, np.float32))
+        assert svc.closed
+        with pytest.raises(RequestRejected) as exc:
+            await svc.multiply("t", "reg", np.zeros(96, np.float32))
+        assert exc.value.reason == "shutdown"
+
+    run(main())
+
+
+def test_backend_failure_propagates_to_awaiter():
+    svc = _service(max_batch=2, buckets=(2,))
+
+    async def main():
+        async with svc:
+            svc.engine.cache.clear()  # plan evicted under live serving
+            with pytest.raises(RuntimeError, match="evicted"):
+                await svc.multiply("t", "reg", np.zeros((96, 2), np.float32))
+
+    run(main())
+    assert svc.errors == 1
+    # the admitted request still resolved its admission slot
+    assert svc.stats()["tenants"]["t"]["pending"] == 0
+
+
+# ------------------------------------------------------- admission units
+
+
+def test_token_bucket_refill():
+    tb = TokenBucket(rate=10.0, burst=2)
+    assert tb.try_take(2, now=0.0)
+    assert not tb.try_take(1, now=0.0)  # empty
+    assert tb.try_take(1, now=0.1)  # 0.1s * 10/s = 1 token back
+    assert not tb.try_take(2, now=0.15)
+    assert tb.try_take(2, now=10.0)  # capped at burst, not rate*10s
+
+
+def test_admission_controller_counters():
+    ac = AdmissionController(default=TenantConfig(max_pending=1))
+    ac.admit("t", vectors=2)
+    with pytest.raises(RequestRejected):
+        ac.admit("t")
+    ac.finished("t")
+    ac.admit("t")
+    snap = ac.snapshot()["t"]
+    assert snap["accepted"] == 2
+    assert snap["vectors"] == 3
+    assert snap["rejected"]["queue_full"] == 1
+    assert snap["pending"] == 1
+
+
+def test_admission_validation():
+    with pytest.raises(ValueError):
+        TokenBucket(rate=0.0)
+    with pytest.raises(ValueError):
+        AdmissionController(safety=0.0)
+    with pytest.raises(ValueError):
+        AsyncSpmvService(SpmvEngine(), est_alpha=0.0)
+
+
+# ------------------------------------------------------------- workload
+
+
+def _spec(**kw) -> WorkloadSpec:
+    base = dict(names=("reg", "sf"), tenants=("a", "b"), n_requests=64,
+                seed=9, rate_rps=1000.0)
+    base.update(kw)
+    return WorkloadSpec(**base)
+
+
+def test_workload_is_deterministic_per_seed():
+    assert generate_trace(_spec()) == generate_trace(_spec())
+    assert generate_trace(_spec()) != generate_trace(_spec(seed=10))
+    # payloads are seeded too
+    r = generate_trace(_spec())[0]
+    np.testing.assert_array_equal(request_vector(r, 96), request_vector(r, 96))
+
+
+def test_workload_arrivals_and_shapes():
+    for arrivals in ("poisson", "bursty"):
+        trace = generate_trace(_spec(arrivals=arrivals))
+        ts = [r.t for r in trace]
+        assert ts == sorted(ts) and ts[0] > 0
+        assert {r.name for r in trace} <= {"reg", "sf"}
+        assert {r.tenant for r in trace} <= {"a", "b"}
+        assert all(r.batch >= 1 for r in trace)
+
+
+def test_workload_zipf_skews_popularity():
+    trace = generate_trace(_spec(n_requests=400, zipf_alpha=2.0))
+    counts = describe_trace(trace)["names"]
+    assert counts["reg"] > counts.get("sf", 0) * 2  # rank 1 dominates
+
+
+def test_workload_infeasible_requests_are_stamped():
+    trace = generate_trace(_spec(deadline_s=1.0, infeasible_frac=0.25))
+    flagged = [r for r in trace if r.infeasible]
+    assert flagged and all(r.deadline_s == 0.0 for r in flagged)
+    assert all(r.deadline_s == 1.0 for r in trace if not r.infeasible)
+
+
+def test_workload_validation():
+    with pytest.raises(ValueError):
+        _spec(names=())
+    with pytest.raises(ValueError):
+        _spec(arrivals="fractal")
+    with pytest.raises(ValueError):
+        _spec(rate_rps=0.0)
+    with pytest.raises(ValueError):
+        _spec(batch_mix={})
+
+
+# --------------------------------------------------------------- replay
+
+
+def test_replay_zero_loss_and_bitexact_oracle():
+    mats = {k: np.round(v * 2.0) for k, v in _mats().items()}  # integer values
+    svc = AsyncSpmvService(SpmvEngine(cache_capacity=8))
+    for name, a in mats.items():
+        svc.register(None, name, a)
+    trace = generate_trace(_spec(
+        n_requests=48, rate_rps=3000.0, arrivals="bursty",
+        deadline_s=30.0, infeasible_frac=0.15, integer_values=True,
+    ))
+    report = replay_sync(svc, trace, oracles=mats, time_scale=0.0,
+                         integer_values=True)
+    assert report.lost == 0  # every request resolved
+    assert report.completed + report.rejected + report.errors == len(trace)
+    assert report.errors == 0
+    # shedding: every infeasible request rejected, none served late
+    n_infeasible = sum(r.infeasible for r in trace)
+    assert report.infeasible_rejected == n_infeasible > 0
+    assert report.infeasible_served == 0 and report.late == 0
+    # integer payloads: float32 SpMV is exact -> bit-equal to the oracle
+    assert report.verified == report.completed
+    assert report.bitexact == report.completed
+    assert report.max_abs_err == 0.0
+    assert 0.0 < report.fairness <= 1.0
+    assert report.phases and abs(
+        report.phases["load"] + report.phases["kernel"]
+        + report.phases["retrieve"] - 1.0
+    ) < 1e-9
+    d = report.to_dict()
+    assert d["reject_reasons"].get("deadline_infeasible") == n_infeasible
+    assert "p99_ms" in d["latency"]
+    assert report.describe()  # renders
+
+
+def test_replay_per_tenant_sections():
+    svc = _service()
+    trace = generate_trace(_spec(n_requests=24))
+    report = replay_sync(svc, trace, time_scale=0.0)
+    assert set(report.per_tenant) == {r.tenant for r in trace}
+    total = sum(d["completed"] for d in report.per_tenant.values())
+    assert total == report.completed == len(trace)
+
+
+def test_replay_inside_running_loop():
+    svc = _service()
+    trace = generate_trace(_spec(n_requests=10))
+
+    async def main():
+        async with svc:
+            return await replay(svc, trace, time_scale=0.0)
+
+    report = run(main())
+    assert report.lost == 0 and report.completed == 10
+
+
+# ---------------------------------------------- engine/batcher satellites
+
+
+def test_batcher_background_failure_rejects_and_survives():
+    """A failed deadline flush must reject its futures AND keep the flush
+    thread alive for later requests (ISSUE: failed flushes must not hang)."""
+    eng = SpmvEngine(cache_capacity=2)
+    a = _mats()["reg"]
+    eng.register("m", a)
+    mb = MicroBatcher(eng, max_batch=8, buckets=(8,), max_delay_s=0.01)
+    with mb:
+        fut = mb.submit("m", np.zeros(96, np.float32))
+        eng.cache.clear()  # evicted under the batcher
+        with pytest.raises(RuntimeError, match="evicted"):
+            fut.result(timeout=5)
+        eng.reactivate("m")
+        x = np.ones(96, np.float32)
+        fut2 = mb.submit("m", x)  # the daemon must still be flushing
+        np.testing.assert_allclose(fut2.result(timeout=5), a @ x,
+                                   rtol=1e-3, atol=1e-4)
+
+
+def test_batcher_result_distribution_failure_resolves_every_future():
+    eng = SpmvEngine(cache_capacity=2)
+    eng.register("m", _mats()["reg"])
+
+    class BadEngine:
+        registry = eng.registry
+
+        def multiply(self, name, X):
+            return np.zeros(3, np.float32)  # wrong shape: Y[:, j] raises
+
+    mb = MicroBatcher(BadEngine(), max_batch=4, buckets=(4,), auto_flush=False)
+    futs = [mb.submit("m", np.zeros(96, np.float32)) for _ in range(3)]
+    mb.flush()
+    assert all(f.done() for f in futs)
+    for f in futs:
+        assert isinstance(f.exception(timeout=1), IndexError)
+
+
+def test_batcher_stop_without_drain_cancels_pending():
+    eng = SpmvEngine(cache_capacity=2)
+    eng.register("m", _mats()["reg"])
+    mb = MicroBatcher(eng, max_batch=8, buckets=(8,), max_delay_s=30.0)
+    mb.start()
+    fut = mb.submit("m", np.zeros(96, np.float32))
+    mb.stop(drain=False)
+    assert fut.cancelled()  # resolved, not stranded
+
+
+def test_eviction_spills_partition_and_reactivates_cheaply():
+    eng = SpmvEngine(cache_capacity=1)
+    mats = _mats()
+    eng.register("a", mats["reg"], warmup=False)
+    eng.register("b", mats["sf"], warmup=False)  # evicts a's plan
+    entry = eng.registry.get("a")
+    assert entry.spill is not None  # host partition survived the eviction
+    parts = eng.partition_count
+    eng.reactivate("a", warmup=False)  # re-place + re-trace only
+    assert eng.partition_count == parts  # no re-partitioning
+    assert entry.spill is None  # ownership handed back to the live plan
+    x = np.ones(96, np.float32)
+    np.testing.assert_allclose(eng.multiply("a", x), mats["reg"] @ x,
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_reregister_after_eviction_skips_dense_rebuild():
+    eng = SpmvEngine(cache_capacity=1)
+    mats = _mats()
+    eng.register("a", mats["reg"], warmup=False)
+    eng.register("b", mats["sf"], warmup=False)  # evicts a
+    parts = eng.partition_count
+    entry = eng.register("a", warmup=False)  # no dense matrix passed at all
+    assert eng.partition_count == parts  # rebuilt from the spilled partition
+    assert entry.cache_key in eng.cache
+    x = np.ones(96, np.float32)
+    np.testing.assert_allclose(eng.multiply("a", x), mats["reg"] @ x,
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_register_without_matrix_requires_prior_entry():
+    eng = SpmvEngine()
+    with pytest.raises(ValueError, match="prior registration"):
+        eng.register("ghost")
+
+
+def test_drift_retune_triggers_second_refinement():
+    from repro.tune import FakeMeasurer, Tuner
+
+    eng = SpmvEngine(
+        cache_capacity=4, tune=True, tune_after=3,
+        tuner=Tuner(measurer=FakeMeasurer()),
+        drift_factor=2.0, drift_alpha=1.0,  # react to the width immediately
+    )
+    a = _mats()["reg"]
+    eng.register("m", a)
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal(96).astype(np.float32)
+    for _ in range(4):  # qualify + first (traffic-triggered) refinement
+        eng.multiply("m", x)
+    eng.drain_tuning()
+    assert [e["trigger"] for e in eng.tune_events] == ["traffic"]
+    assert eng.registry.get("m").tuned_batch == 1.0
+    X = rng.standard_normal((96, 8)).astype(np.float32)
+    for _ in range(3):  # sustained 8-wide traffic: 8x drift >= factor 2
+        eng.multiply("m", X)
+    eng.drain_tuning()
+    assert [e["trigger"] for e in eng.tune_events] == ["traffic", "drift"]
+    assert eng.registry.get("m").tuned_batch == 8.0
+    np.testing.assert_allclose(eng.multiply("m", X), a @ X,
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_failing_refinement_does_not_respawn_per_request_under_drift():
+    """A persistently failing refine must stay one-shot per drift regime:
+    the failure path anchors tuned_batch so drift does not re-spawn the
+    (expensive, failing) refinement on every subsequent request."""
+
+    class BrokenTuner:
+        calls = 0
+
+        def tune(self, *a, **kw):
+            BrokenTuner.calls += 1
+            raise RuntimeError("no runnable candidates")
+
+    eng = SpmvEngine(cache_capacity=4, tune=True, tune_after=2,
+                     tuner=BrokenTuner(), drift_factor=2.0, drift_alpha=1.0)
+    a = _mats()["reg"]
+    eng.register("m", a)
+    x = np.zeros(96, np.float32)
+    for _ in range(3):  # qualify -> first refinement fails
+        eng.multiply("m", x)
+    eng.drain_tuning()
+    assert len(eng.tune_events) == 1 and "error" in eng.tune_events[0]
+    X = np.zeros((96, 8), np.float32)
+    for _ in range(6):  # new drift regime: exactly ONE more failing attempt
+        eng.multiply("m", X)
+        eng.drain_tuning()
+    assert BrokenTuner.calls == 2
+    assert len(eng.tune_events) == 2
+
+
+def test_drift_retune_disabled_with_none_factor():
+    from repro.tune import FakeMeasurer, Tuner
+
+    eng = SpmvEngine(
+        cache_capacity=4, tune=True, tune_after=2,
+        tuner=Tuner(measurer=FakeMeasurer()), drift_factor=None,
+    )
+    a = _mats()["reg"]
+    eng.register("m", a)
+    x = np.zeros(96, np.float32)
+    for _ in range(3):
+        eng.multiply("m", x)
+    eng.drain_tuning()
+    X = np.zeros((96, 8), np.float32)
+    for _ in range(3):
+        eng.multiply("m", X)
+    eng.drain_tuning()
+    assert len(eng.tune_events) == 1  # one-shot semantics preserved

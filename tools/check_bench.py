@@ -36,13 +36,23 @@ def load_rows(path: str) -> dict:
     return out
 
 
+def ratio_of(b: float, c: float) -> float:
+    """current/baseline with a sound zero-baseline rule: a 0 -> 0 row is
+    unchanged (rate-style rows like serve.reject.permille are legitimately
+    zero), while 0 -> anything positive is an infinite regression (the
+    quantity appeared out of nowhere)."""
+    if b > 0:
+        return c / b
+    return 1.0 if c <= 0 else float("inf")
+
+
 def compare(base: dict, cur: dict, threshold: float) -> tuple[list, list, list]:
     """Returns (regressions, missing, new) where regressions are
     (name, base_us, cur_us, ratio) tuples."""
     regressions = []
     for name in sorted(base.keys() & cur.keys()):
         b, c = base[name], cur[name]
-        ratio = c / b if b > 0 else float("inf")
+        ratio = ratio_of(b, c)
         if ratio > threshold:
             regressions.append((name, b, c, ratio))
     missing = sorted(base.keys() - cur.keys())
@@ -71,7 +81,7 @@ def main() -> int:
 
     shared = sorted(base.keys() & cur.keys())
     for name in shared:
-        ratio = cur[name] / base[name] if base[name] > 0 else float("inf")
+        ratio = ratio_of(base[name], cur[name])
         flag = " <-- REGRESSION" if ratio > args.threshold else ""
         print(f"{name}: {base[name]:.1f}us -> {cur[name]:.1f}us "
               f"({ratio:.2f}x){flag}")
