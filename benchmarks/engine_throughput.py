@@ -113,6 +113,10 @@ def main(argv=None):
     header("fig17-style request breakdown (fractions of request time)")
     for spec in specs:
         bd = eng.telemetry.breakdown(spec.name)
+        if bd.get("load") is None:  # zero-total breakdowns carry no fractions
+            print(f"{spec.name}: no measurable phase time "
+                  f"(requests={bd.get('requests', 0)})")
+            continue
         print(f"{spec.name}: load={bd['load']:.2f} kernel={bd['kernel']:.2f} "
               f"retrieve={bd['retrieve']:.2f} requests={bd['requests']} "
               f"vectors={bd['vectors']} traces={bd['traces']}")

@@ -2,15 +2,22 @@
 
     PYTHONPATH=src python -m benchmarks.serve_replay [--smoke]
                                                      [--json BENCH_serve.json]
+                                                     [--trace OUT.json]
                                                      [--requests N]
 
 Fires a seeded Zipfian/bursty trace (two tenants, mixed vector/batch
 requests) at an :class:`~repro.serve.AsyncSpmvService` and prints
-``name,us_per_call,derived`` CSV rows — p50/p95/p99/mean serving latency
-plus a reject-rate row — the same row shape every other benchmark emits, so
-``tools/check_bench.py`` can gate a fresh run against the committed
-``BENCH_serve.json`` baseline and CI can upload the JSON as the perf
-trajectory.
+``name,us_per_call,derived`` CSV rows — p50/p95/p99/mean serving latency,
+a queue-wait p95 row, a reject-rate row, plus shed-by-reason count rows
+(``"kind": "count"``; exempt from the wall-clock gate) — the same row shape
+every other benchmark emits, so ``tools/check_bench.py`` can gate a fresh
+run against the committed ``BENCH_serve.json`` baseline and CI can upload
+the JSON as the perf trajectory.
+
+``--trace OUT.json`` dumps the final measured replay's request spans as
+Chrome/Perfetto trace JSON (load it at https://ui.perfetto.dev or
+``chrome://tracing``) — every accepted request decomposes into
+admit/queue_wait/batch_form/load/kernel/retrieve/deliver spans.
 
 A warmup replay (same matrices, different seed) runs first and is
 discarded: it pays the per-bucket trace/compile costs so the measured
@@ -53,6 +60,9 @@ def main(argv=None) -> int:
                     help="tiny trace for the CI perf job")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write the rows as machine-readable JSON")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="write the final replay's spans as Chrome/Perfetto "
+                         "trace JSON")
     ap.add_argument("--requests", type=int, default=None,
                     help="trace length (default: 48 smoke / 160 full)")
     ap.add_argument("--repeats", type=int, default=3,
@@ -96,10 +106,12 @@ def main(argv=None) -> int:
             await replay(service, warm, time_scale=0.0)  # discarded
             for _ in range(args.repeats):
                 service.engine.telemetry.clear()
+                service.tracer.clear()  # keep only the last repeat's spans
                 reports.append(await replay(service, trace, time_scale=0.0))
-        return reports
+            spans = service.tracer.spans()
+        return reports, spans
 
-    reports = asyncio.run(measured())
+    reports, spans = asyncio.run(measured())
 
     def med(pick) -> float:
         return float(np.median([pick(r) for r in reports]))
@@ -112,9 +124,11 @@ def main(argv=None) -> int:
           "median over repeats)")
     rows = []
 
-    def row(name: str, us: float, extra: str = "") -> None:
-        rows.append({"name": name, "us_per_call": round(us, 1),
-                     "derived": extra})
+    def row(name: str, us: float, extra: str = "", kind: str = None) -> None:
+        r = {"name": name, "us_per_call": round(us, 1), "derived": extra}
+        if kind is not None:
+            r["kind"] = kind  # count rows are exempt from the perf gate
+        rows.append(r)
         print(f"{name},{us:.1f},{extra}")
 
     row("serve.latency.p50", med(lambda r: r.latency["p50_ms"]) * 1e3, derived)
@@ -126,13 +140,26 @@ def main(argv=None) -> int:
     # much steadier than any percentile (queue order cancels out)
     row("serve.drain.us_per_req",
         med(lambda r: r.wall_s / max(1, r.completed)) * 1e6, derived)
+    # queue wait at the p95: where a deep backlog shows up first; 0.0 when
+    # the tracer recorded no queue_wait spans (tracing disabled)
+    row("serve.queue_wait.p95",
+        med(lambda r: r.queue_wait.get("p95_ms", 0.0)) * 1e3,
+        f"coverage={report.span_coverage:.3f}")
     # reject-rate as permille in the us_per_call slot: 0.0 for this
     # deadline-free workload, so any future shedding fails the gate
     row("serve.reject.permille",
         med(lambda r: 1000.0 * r.reject_rate),
         f"reasons={report.reject_reasons or {}}")
+    # shed-by-reason counts (final repeat): kind=count rows ride in the JSON
+    # for trajectory tracking but are exempt from the wall-clock gate
+    from repro.serve.admission import REJECT_REASONS
+    for reason in REJECT_REASONS:
+        row(f"serve.shed.{reason}",
+            float(report.reject_reasons.get(reason, 0)),
+            "per-replay shed count", kind="count")
     print(f"# lost={report.lost} errors={report.errors} "
-          f"throughput={report.throughput_rps:.0f}/s")
+          f"throughput={report.throughput_rps:.0f}/s "
+          f"span_coverage={report.span_coverage:.3f}")
 
     lost = sum(r.lost for r in reports)
     errors = sum(r.errors for r in reports)
@@ -150,6 +177,13 @@ def main(argv=None) -> int:
         with open(args.json, "w", encoding="utf-8") as fh:
             json.dump(doc, fh, indent=2, sort_keys=True)
         print(f"# wrote {args.json} ({len(rows)} rows)", file=sys.stderr)
+
+    if args.trace:
+        from repro.obs import chrome_trace
+        with open(args.trace, "w", encoding="utf-8") as fh:
+            json.dump(chrome_trace(spans), fh)
+        print(f"# wrote {args.trace} ({len(spans)} spans, "
+              f"coverage={report.span_coverage:.3f})", file=sys.stderr)
     return 0
 
 

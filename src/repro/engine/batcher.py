@@ -40,6 +40,8 @@ class _Pending:
     x: np.ndarray
     future: Future
     deadline: float  # monotonic time by which this request must flush
+    ctx: object = None  # repro.obs Trace handle (or None / NULL_TRACE)
+    t_submit: float = 0.0  # perf_counter at enqueue (queue_wait span start)
 
 
 class MicroBatcher:
@@ -50,6 +52,7 @@ class MicroBatcher:
         buckets: Sequence[int] = (1, 2, 4, 8),
         auto_flush: bool = True,
         max_delay_s: float = 0.002,
+        metrics=None,
     ) -> None:
         if max_batch > max(buckets):
             raise ValueError("max_batch must be <= the largest bucket")
@@ -58,6 +61,9 @@ class MicroBatcher:
         self.buckets = tuple(sorted(buckets))
         self.auto_flush = auto_flush
         self.max_delay_s = max_delay_s
+        # optional repro.obs.MetricsRegistry: queue-depth gauge + batch-width
+        # histogram land here when the serving layer provides one
+        self.metrics = metrics
         self._lock = threading.Lock()
         self._cv = threading.Condition(self._lock)
         self._queues: Dict[str, List[_Pending]] = defaultdict(list)
@@ -69,12 +75,18 @@ class MicroBatcher:
 
     # ------------------------------------------------------------- requests
 
-    def submit(self, name: str, x, deadline_s: Optional[float] = None) -> Future:
+    def submit(self, name: str, x, deadline_s: Optional[float] = None,
+               ctx=None) -> Future:
         """Enqueue one SpMV; returns a Future resolving to y (rows,).
 
         ``deadline_s`` is this request's latency budget: in background mode
         its queue is flushed no later than ``deadline_s`` after submission
         (default ``max_delay_s``).
+
+        ``ctx`` is an optional :class:`repro.obs.Trace` handle: the batcher
+        stamps ``queue_wait`` (enqueue -> batch claimed) and ``batch_form``
+        (claim -> stacked) spans on it, and the engine continues with the
+        load/kernel/retrieve phases of the coalesced batch.
 
         A failed flush (the executor raising under the coalesced batch)
         rejects the pending futures with that exception — a submitted
@@ -93,12 +105,16 @@ class MicroBatcher:
         budget = self.max_delay_s if deadline_s is None else deadline_s
         fut: Future = Future()
         with self._cv:
-            self._queues[name].append(
-                _Pending(x, fut, time.monotonic() + budget)
-            )
-            full = len(self._queues[name]) >= self.max_batch
+            self._queues[name].append(_Pending(
+                x, fut, time.monotonic() + budget,
+                ctx=ctx, t_submit=time.perf_counter(),
+            ))
+            depth = len(self._queues[name])
+            full = depth >= self.max_batch
             # wake the flush thread: the earliest deadline may have moved up
             self._cv.notify_all()
+        if self.metrics is not None:
+            self.metrics.gauge("serve.queue.depth", matrix=name).set(depth)
         if full and self.auto_flush:
             self.flush(name)
         return fut
@@ -126,6 +142,9 @@ class MicroBatcher:
 
     def _run_taken(self, taken: Dict[str, List[_Pending]]) -> int:
         served = 0
+        if self.metrics is not None:
+            for n in taken:  # these queues were just popped empty
+                self.metrics.gauge("serve.queue.depth", matrix=n).set(0)
         for n, reqs in taken.items():
             while reqs:
                 chunk, reqs = reqs[: self.max_batch], reqs[self.max_batch:]
@@ -144,17 +163,32 @@ class MicroBatcher:
         thread.
         """
         try:
+            t_claim = time.perf_counter()
             # claim the futures up front; drop waiters that cancelled
             live = [p for p in reqs if p.future.set_running_or_notify_cancel()]
             if not live:
                 return
+            for p in live:  # queue_wait: enqueue -> this batch claimed it
+                if p.ctx is not None:
+                    p.ctx.add("queue_wait", p.t_submit, t_claim)
             xs = [p.x for p in live]
             b = len(xs)
             padded = self._bucket(b)
             X = np.stack(xs + [np.zeros_like(xs[0])] * (padded - b), axis=1)
-            Y = self.engine.multiply(name, X)
+            t_stack = time.perf_counter()
+            for p in live:  # batch_form: stacking + bucket padding
+                if p.ctx is not None:
+                    p.ctx.add("batch_form", t_claim, t_stack,
+                              width=b, padded=padded)
+            obs = [p.ctx for p in live if p.ctx is not None]
+            # only pass obs when someone is tracing: duck-typed engine
+            # stand-ins (tests, mocks) need not grow the kwarg
+            Y = (self.engine.multiply(name, X, obs=obs) if obs
+                 else self.engine.multiply(name, X))
             self.batches_run += 1
             self.vectors_run += b
+            if self.metrics is not None:
+                self.metrics.histogram("serve.batch.width").observe(b)
             for j, p in enumerate(live):
                 p.future.set_result(np.asarray(Y[:, j]))
         except Exception as exc:  # deliver the failure to every open waiter

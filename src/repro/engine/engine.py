@@ -30,6 +30,7 @@ from repro.core.adaptive import HardwareModel, Plan
 from repro.engine.plan_cache import CompiledPlan, PlanCache, PlanKey
 from repro.engine.registry import MatrixRegistry, RegisteredMatrix
 from repro.engine.telemetry import RequestRecord, Telemetry
+from repro.obs import profile as obs_profile
 
 __all__ = ["SpmvEngine"]
 
@@ -178,7 +179,10 @@ class SpmvEngine:
             ep.part = part  # spilled host partition: skip re-partitioning
         else:
             self.partition_count += 1
-        exe = ep.compile()
+        # label the (expensive) partition+place+trace region in any captured
+        # device profile; a no-op wherever jax.profiler is unavailable
+        with obs_profile.annotate(f"plan_compile:{plan.tag}:{impl}"):
+            exe = ep.compile()
         return CompiledPlan(
             key=key,
             impl=impl,
@@ -356,7 +360,7 @@ class SpmvEngine:
             self.plan_for(name).executor.warmup()
         return entry
 
-    def multiply(self, name: str, x) -> np.ndarray:
+    def multiply(self, name: str, x, *, obs=None) -> np.ndarray:
         """y = A @ x for registered ``name``.
 
         Serves from the cached executor: place x -> run the jitted program ->
@@ -366,6 +370,11 @@ class SpmvEngine:
         Args:
           name: handle from :meth:`register`.
           x: (cols,) vector, or (cols, B) for a batched SpMM request.
+          obs: optional :class:`repro.obs.Trace` handle — or a sequence of
+            them, one per rider of a coalesced batch — on which the three
+            phase spans (load/kernel/retrieve) of THIS execution are
+            recorded.  Riders share the batch's phase timestamps: the batch
+            ran once, and that once is each rider's kernel time.
 
         Returns:
           Host rows (rows[, B]).
@@ -383,12 +392,20 @@ class SpmvEngine:
 
         traces_before = cp.trace_count
         t0 = time.perf_counter()
-        xs = exe.place(x)  # load: validate dtype/shape, pad, put on mesh
+        with obs_profile.annotate(f"spmv_load:{name}"):
+            xs = exe.place(x)  # load: validate dtype/shape, pad, put on mesh
         t1 = time.perf_counter()
-        raw = exe.run_raw(xs)  # kernel: the cached jitted shard_map program
+        with obs_profile.annotate(f"spmv_kernel:{name}:b{batch}"):
+            raw = exe.run_raw(xs)  # kernel: the cached jitted shard_map program
         t2 = time.perf_counter()
-        y = exe.assemble(raw)  # retrieve: fetch + assemble global rows
+        with obs_profile.annotate(f"spmv_retrieve:{name}"):
+            y = exe.assemble(raw)  # retrieve: fetch + assemble global rows
         t3 = time.perf_counter()
+        if obs is not None:
+            for ctx in (obs if isinstance(obs, (list, tuple)) else (obs,)):
+                ctx.add("load", t0, t1)
+                ctx.add("kernel", t1, t2, batch=batch)
+                ctx.add("retrieve", t2, t3)
 
         entry.requests += batch
         warm = cp.requests_served > 0

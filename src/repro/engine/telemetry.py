@@ -11,9 +11,16 @@ The engine's serving path has the same three phases on TPU:
 Each request appends one :class:`RequestRecord`; :meth:`Telemetry.breakdown`
 aggregates the per-phase fractions per matrix, which is exactly the stacked
 bar of Fig. 17 (and what benchmarks/engine_throughput.py prints).
+
+The per-request log is a **ring buffer**: only the most recent
+``max_records`` records are retained (long replays used to hold millions of
+records alive), while the per-matrix aggregates in :meth:`breakdown` stay
+exact over the full lifetime — they are folded in at :meth:`record` time,
+never recomputed from the ring.
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass
 from typing import Dict, List, Optional
 
@@ -46,13 +53,30 @@ class _Agg:
 
 
 class Telemetry:
-    """Append-only request log + per-matrix aggregation."""
+    """Ring-buffered request log + exact per-matrix aggregation.
 
-    def __init__(self, keep_records: bool = True) -> None:
+    Args:
+      keep_records: retain individual :class:`RequestRecord`\\ s (the engine
+        default).  Aggregates are kept either way.
+      max_records: ring capacity when keeping records — the memory bound for
+        long-running serving.  ``None`` restores the unbounded legacy
+        behavior (tests only; a served engine should always be bounded).
+    """
+
+    def __init__(self, keep_records: bool = True,
+                 max_records: Optional[int] = 10_000) -> None:
+        if max_records is not None and max_records < 1:
+            raise ValueError(f"max_records must be >= 1, got {max_records}")
         self._keep = keep_records
-        self.records: List[RequestRecord] = []
+        self.max_records = max_records
+        self._records: deque = deque(maxlen=max_records)
         self._by_name: Dict[str, _Agg] = {}
         self._last: Dict[str, RequestRecord] = {}
+
+    @property
+    def records(self) -> List[RequestRecord]:
+        """The retained records, oldest first (a list copy of the ring)."""
+        return list(self._records)
 
     def last(self, name: str) -> Optional[RequestRecord]:
         """The most recent record for ``name`` (None before the first
@@ -62,7 +86,7 @@ class Telemetry:
 
     def record(self, rec: RequestRecord) -> None:
         if self._keep:
-            self.records.append(rec)
+            self._records.append(rec)  # deque drops the oldest at capacity
         self._last[rec.name] = rec
         agg = self._by_name.setdefault(rec.name, _Agg())
         agg.requests += 1
@@ -73,10 +97,14 @@ class Telemetry:
         agg.traces += int(rec.traced)
 
     def breakdown(self, name: Optional[str] = None) -> dict:
-        """Fig.-17-style per-phase split.
+        """Fig.-17-style per-phase split (exact, full-lifetime aggregates).
 
         Returns {matrix: {load, kernel, retrieve (fractions), total_s,
         requests, vectors, traces}} — or the single dict when ``name`` given.
+        A matrix whose every request measured ``total == 0`` (mocked or
+        fake-measurer paths) reports ``None`` fractions rather than an
+        all-zero split that sums to 0 instead of 1 — consumers asserting
+        fraction sums (or printing stacked bars) must skip those entries.
         """
         out = {}
         for n, agg in self._by_name.items():
@@ -86,15 +114,15 @@ class Telemetry:
                 "vectors": agg.vectors,
                 "traces": agg.traces,
                 "total_s": total,
-                "load": agg.load_s / total if total else 0.0,
-                "kernel": agg.kernel_s / total if total else 0.0,
-                "retrieve": agg.retrieve_s / total if total else 0.0,
+                "load": agg.load_s / total if total else None,
+                "kernel": agg.kernel_s / total if total else None,
+                "retrieve": agg.retrieve_s / total if total else None,
             }
         if name is not None:
             return out.get(name, {})
         return out
 
     def clear(self) -> None:
-        self.records.clear()
+        self._records.clear()
         self._by_name.clear()
         self._last.clear()

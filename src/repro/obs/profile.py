@@ -1,0 +1,87 @@
+"""Guarded ``jax.profiler`` annotation wrappers.
+
+``jax.profiler.TraceAnnotation`` / ``StepTraceAnnotation`` label host-side
+regions so a captured device profile (``jax.profiler.trace(logdir)`` or
+TensorBoard capture) shows *which request / which phase* issued each XLA
+dispatch — the missing join between the serving timeline and the device
+timeline.  But the serving stack must run identically where no profiler
+exists (CPU CI, interpret-mode Pallas, stripped builds), so every wrapper
+here degrades to a shared no-op context manager when
+
+  * ``jax.profiler`` is unavailable or lacks the annotation classes, or
+  * annotations are disabled (``set_enabled(False)`` or the
+    ``REPRO_OBS_PROFILE=0`` environment variable).
+
+The wrappers are *labels*, not measurements: span timing is the tracing
+layer's job (:mod:`repro.obs.tracing`); these only make the phases visible
+inside an externally captured profile.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+__all__ = ["annotate", "step_annotate", "set_enabled", "profiler_available"]
+
+try:  # profiler-less builds (or a stripped jax) must not break serving
+    from jax.profiler import StepTraceAnnotation as _StepTraceAnnotation
+    from jax.profiler import TraceAnnotation as _TraceAnnotation
+
+    _AVAILABLE = True
+except Exception:  # pragma: no cover - exercised only on stripped installs
+    _TraceAnnotation = _StepTraceAnnotation = None
+    _AVAILABLE = False
+
+_enabled = _AVAILABLE and os.environ.get("REPRO_OBS_PROFILE", "1") != "0"
+
+
+class _NullAnnotation:
+    """Shared no-op annotation (never allocated per call)."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        return False
+
+
+_NULL = _NullAnnotation()
+
+
+def profiler_available() -> bool:
+    """True when jax.profiler annotations can be emitted at all."""
+    return _AVAILABLE
+
+
+def set_enabled(on: bool) -> bool:
+    """Toggle annotation emission; returns the effective state (stays off
+    when the profiler is unavailable)."""
+    global _enabled
+    _enabled = bool(on) and _AVAILABLE
+    return _enabled
+
+
+def annotate(name: str, **kwargs):
+    """A ``TraceAnnotation(name)`` — or the shared no-op when disabled.
+
+    Use around host-side regions worth seeing in a device profile: plan
+    compile, kernel dispatch, batch formation.
+    """
+    if not _enabled:
+        return _NULL
+    return _TraceAnnotation(name, **kwargs)
+
+
+def step_annotate(name: str, step: Optional[int] = None):
+    """A ``StepTraceAnnotation`` (profiler 'step' marker) — or the no-op.
+
+    Steps group work in the TensorBoard profiler's step view; the serving
+    layer stamps one per coalesced batch with the batch ordinal.
+    """
+    if not _enabled:
+        return _NULL
+    if step is None:
+        return _StepTraceAnnotation(name)
+    return _StepTraceAnnotation(name, step_num=step)

@@ -21,9 +21,20 @@ budgets:
     Shedding infeasible work is the paper-era wisdom of every SLO system:
     a late answer costs the same as a rejection but also delays everyone
     behind it.
+  * **queue-aware feasibility** — bare service time is a lie under backlog:
+    a request behind ``d`` queued vectors waits ~``d x estimate`` before its
+    own service even starts.  With a ``queue_depth`` (the serving layer
+    reads it off the batcher's queue-depth gauge), the controller models
+    expected completion as ``(queue_depth + 1) x estimate`` and sheds on
+    that sum with ``queue_wait_infeasible`` — closing the deep-backlog hole
+    where a deadline covering one service time was admitted into a queue
+    holding ten.
 
 All decisions are O(1) and synchronous; the asyncio service calls
-:meth:`AdmissionController.admit` on the event loop thread only.
+:meth:`AdmissionController.admit` on the event loop thread only.  With a
+:class:`repro.obs.MetricsRegistry` attached, every shed increments a
+``serve.shed{reason=...}`` counter and token buckets export a
+``serve.tokens.remaining{tenant=...}`` gauge.
 """
 
 from __future__ import annotations
@@ -45,6 +56,7 @@ REJECT_REASONS = (
     "queue_full",
     "rate_limited",
     "deadline_infeasible",
+    "queue_wait_infeasible",
     "shutdown",
 )
 
@@ -141,18 +153,21 @@ class AdmissionController:
     """Per-tenant admit/deny with bounded queues, buckets and shedding."""
 
     def __init__(self, default: Optional[TenantConfig] = None,
-                 safety: float = 1.0):
+                 safety: float = 1.0, metrics=None):
         """Args:
           default: budgets applied to tenants without an explicit
             :meth:`configure` call (default: ``TenantConfig()``).
           safety: deadline feasibility margin — a request is infeasible when
             ``deadline_s < estimate_s * safety``; raise above 1.0 to shed
             earlier (protects the p99 at the cost of the reject rate).
+          metrics: optional :class:`repro.obs.MetricsRegistry` —
+            shed-by-reason counters and tokens-remaining gauges land here.
         """
         if safety <= 0:
             raise ValueError(f"safety must be > 0, got {safety}")
         self.default = default if default is not None else TenantConfig()
         self.safety = float(safety)
+        self.metrics = metrics
         self._tenants: Dict[str, TenantState] = {}
 
     # ----------------------------------------------------------- tenancy
@@ -195,6 +210,7 @@ class AdmissionController:
         vectors: int = 1,
         deadline_s: Optional[float] = None,
         estimate_s: Optional[float] = None,
+        queue_depth: Optional[int] = None,
         now: Optional[float] = None,
     ) -> TenantState:
         """Admit one request of ``vectors`` RHS or raise RequestRejected.
@@ -208,6 +224,12 @@ class AdmissionController:
           deadline_s: the request's SLO latency budget, if any.
           estimate_s: current service-time estimate for this work (the
             service's observed EWMA); feasibility is skipped when unknown.
+          queue_depth: vectors already queued ahead of this request (the
+            batcher's queue-depth gauge).  With an estimate, expected
+            completion is modeled as ``(queue_depth + 1) * estimate_s`` and
+            a deadline below that (x safety) sheds with
+            ``queue_wait_infeasible`` — bare service feasibility alone
+            would admit into an already-doomed backlog.
           now: injected monotonic time (tests/replay).
 
         Returns:
@@ -228,12 +250,26 @@ class AdmissionController:
                     f"deadline {deadline_s:.2e}s < estimated service "
                     f"{estimate_s:.2e}s x safety {self.safety}",
                 )
+            if estimate_s is not None and queue_depth:
+                expected = (queue_depth + 1) * estimate_s
+                if deadline_s < expected * self.safety:
+                    self._reject(
+                        state, tenant, "queue_wait_infeasible",
+                        f"deadline {deadline_s:.2e}s < expected wait+service "
+                        f"({queue_depth} ahead + 1) x {estimate_s:.2e}s "
+                        f"x safety {self.safety}",
+                    )
         if cfg.max_pending is not None and state.pending >= cfg.max_pending:
             self._reject(state, tenant, "queue_full",
                          f"{state.pending} >= max_pending {cfg.max_pending}")
-        if state.bucket is not None and not state.bucket.try_take(vectors, now):
-            self._reject(state, tenant, "rate_limited",
-                         f"bucket empty for {vectors} vector(s)")
+        if state.bucket is not None:
+            admitted = state.bucket.try_take(vectors, now)
+            if self.metrics is not None:
+                self.metrics.gauge("serve.tokens.remaining",
+                                   tenant=tenant).set(state.bucket.tokens)
+            if not admitted:
+                self._reject(state, tenant, "rate_limited",
+                             f"bucket empty for {vectors} vector(s)")
         state.pending += 1
         state.accepted += 1
         state.vectors += vectors
@@ -242,11 +278,15 @@ class AdmissionController:
     def _reject(self, state: TenantState, tenant: str, reason: str,
                 detail: str) -> None:
         state.rejected[reason] += 1
+        if self.metrics is not None:
+            self.metrics.counter("serve.shed", reason=reason).inc()
         raise RequestRejected(tenant, reason, detail)
 
     def reject_all(self, tenant: str, reason: str = "shutdown") -> None:
         """Count an out-of-band rejection (e.g. service closed)."""
         self.state(tenant).rejected[reason] += 1
+        if self.metrics is not None:
+            self.metrics.counter("serve.shed", reason=reason).inc()
 
     def finished(self, tenant: str) -> None:
         """A previously admitted request resolved (success or failure)."""

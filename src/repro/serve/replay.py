@@ -17,6 +17,10 @@ and a correctness PR must not:
   * per-tenant fairness (Jain's index over completed vectors),
   * the paper's Fig.-17 load/kernel/retrieve split, aggregated from the
     engine's :class:`~repro.engine.telemetry.Telemetry`,
+  * **per-phase latency attribution** from the service's request traces
+    (:mod:`repro.obs`): p50/p95/p99 per lifecycle phase (admit, queue_wait,
+    batch_form, load, kernel, retrieve, deliver) plus dedicated queue-wait
+    stats and mean span coverage — where a p99 request's deadline went,
   * optional oracle verification: with ``oracles={name: dense}`` every
     completed y is compared against ``a @ x`` — max |err| always, and a
     bit-equality count for integer-valued workloads.
@@ -29,6 +33,9 @@ from dataclasses import dataclass, field
 from typing import Dict, Optional, Sequence
 
 import numpy as np
+
+from repro.obs.tracing import clock as obs_clock
+from repro.obs.tracing import trace_summary
 
 from .admission import RequestRejected
 from .workload import ServeRequest, request_vector
@@ -74,6 +81,11 @@ class SLOReport:
     per_tenant: Dict[str, dict] = field(default_factory=dict)
     fairness: float = 1.0  # Jain's index over per-tenant completed vectors
     phases: dict = field(default_factory=dict)  # Fig.-17 load/kernel/retrieve
+    # span-level attribution (from the service tracer, when enabled):
+    # {phase: p50/p95/p99/mean ms + count} per lifecycle phase
+    phase_latency: dict = field(default_factory=dict)
+    queue_wait: dict = field(default_factory=dict)  # queue_wait ms stats
+    span_coverage: float = 0.0  # mean (spanned time)/(e2e) over traces
     wall_s: float = 0.0
     verified: int = 0  # completions compared against the dense oracle
     bitexact: int = 0  # of those, bit-identical results
@@ -103,6 +115,10 @@ class SLOReport:
             "per_tenant": {t: dict(d) for t, d in self.per_tenant.items()},
             "fairness": self.fairness,
             "phases": dict(self.phases),
+            "phase_latency": {p: dict(d) for p, d in
+                              self.phase_latency.items()},
+            "queue_wait": dict(self.queue_wait),
+            "span_coverage": self.span_coverage,
             "wall_s": self.wall_s,
             "throughput_rps": self.throughput_rps,
             "verified": self.verified,
@@ -142,6 +158,23 @@ class SLOReport:
                 f"kernel={self.phases['kernel']:.2f} "
                 f"retrieve={self.phases['retrieve']:.2f}"
             )
+        if self.queue_wait:
+            qw = self.queue_wait
+            lines.append(
+                f"  queue wait ms: p50={qw['p50_ms']:.2f} "
+                f"p95={qw['p95_ms']:.2f} p99={qw['p99_ms']:.2f} "
+                f"max={qw['max_ms']:.2f}"
+            )
+        if self.phase_latency:
+            lines.append("  per-phase attribution (p50/p95/p99 ms):")
+            for phase, d in self.phase_latency.items():
+                lines.append(
+                    f"    {phase}: {d['p50_ms']:.2f}/{d['p95_ms']:.2f}/"
+                    f"{d['p99_ms']:.2f} (n={d['count']})"
+                )
+            lines.append(
+                f"  span coverage (spanned/e2e): {self.span_coverage:.3f}"
+            )
         if self.verified:
             lines.append(
                 f"  oracle: {self.verified} verified, {self.bitexact} "
@@ -154,6 +187,10 @@ def _aggregate_phases(telemetry) -> dict:
     """Total_s-weighted Fig.-17 split across every matrix the engine served."""
     total = load = kernel = retrieve = 0.0
     for bd in telemetry.breakdown().values():
+        # breakdown() reports None fractions for matrices with zero total
+        # phase time — they contribute nothing to the weighted split
+        if bd["total_s"] <= 0 or bd["load"] is None:
+            continue
         total += bd["total_s"]
         load += bd["load"] * bd["total_s"]
         kernel += bd["kernel"] * bd["total_s"]
@@ -162,6 +199,41 @@ def _aggregate_phases(telemetry) -> dict:
         return {}
     return {"load": load / total, "kernel": kernel / total,
             "retrieve": retrieve / total, "total_s": total}
+
+
+def _aggregate_spans(tracer, start_mark: float):
+    """Fold the service tracer's spans (from this replay only) into
+    per-phase latency stats, queue-wait stats, and mean span coverage.
+
+    Returns ``(phase_latency, queue_wait, span_coverage)`` — empty/zero when
+    the tracer is absent, disabled, or recorded nothing after
+    ``start_mark``.
+    """
+    if tracer is None:
+        return {}, {}, 0.0
+    spans = [s for s in tracer.spans() if s.start_s >= start_mark]
+    if not spans:
+        return {}, {}, 0.0
+    by_phase: Dict[str, list] = {}
+    for s in spans:
+        by_phase.setdefault(s.name, []).append(s.duration_s)
+    phase_latency = {}
+    for phase, durs in sorted(by_phase.items()):
+        stats = _percentiles(durs)
+        stats["count"] = len(durs)
+        stats["total_s"] = float(sum(durs))
+        phase_latency[phase] = stats
+    queue_wait = {}
+    qw = by_phase.get("queue_wait")
+    if qw:
+        queue_wait = _percentiles(qw)
+        queue_wait["max_ms"] = float(max(qw) * 1e3)
+        queue_wait["count"] = len(qw)
+    summaries = trace_summary(spans)
+    coverages = [d["coverage"] for d in summaries.values()
+                 if d["total_s"] > 0]
+    coverage = float(np.mean(coverages)) if coverages else 0.0
+    return phase_latency, queue_wait, coverage
 
 
 async def replay(
@@ -242,6 +314,7 @@ async def replay(
                 report.bitexact += 1
 
     start = loop.time()
+    start_mark = obs_clock()  # only spans recorded after this mark are ours
     tasks = []
     for i, req in enumerate(trace):
         if time_scale > 0:
@@ -270,6 +343,9 @@ async def replay(
     report.per_tenant = per_tenant
     report.fairness = _jain([d["vectors"] for d in per_tenant.values()])
     report.phases = _aggregate_phases(service.engine.telemetry)
+    (report.phase_latency, report.queue_wait,
+     report.span_coverage) = _aggregate_spans(
+        getattr(service, "tracer", None), start_mark)
     return report
 
 

@@ -23,6 +23,15 @@ Rejected requests raise :class:`~repro.serve.admission.RequestRejected`
 deadline has burned down in a queue.  ``drain()`` flushes and awaits all
 in-flight work; ``aclose()`` (or ``async with``) drains and then rejects
 further traffic with reason ``shutdown``.
+
+Observability (:mod:`repro.obs`): the service owns a ring-buffered
+``Tracer`` and a ``MetricsRegistry``.  Every request gets a lifecycle trace
+— ``admit -> queue_wait -> batch_form -> load -> kernel -> retrieve ->
+deliver`` — threaded through the batcher into the engine, and the admission
+controller sheds on *queue-aware* expected completion (queued vectors ahead
+x the service-time EWMA, reason ``queue_wait_infeasible``), not bare
+service time.  ``tracer=Tracer(enabled=False)`` turns tracing into a
+zero-allocation no-op.
 """
 
 from __future__ import annotations
@@ -34,6 +43,8 @@ from typing import Dict, Optional
 import numpy as np
 
 from repro.engine import MicroBatcher, SpmvEngine
+from repro.obs import MetricsRegistry, Tracer
+from repro.obs.tracing import clock as obs_clock
 
 from .admission import AdmissionController, RequestRejected, TenantConfig
 
@@ -56,6 +67,8 @@ class AsyncSpmvService:
         buckets=(1, 2, 4, 8),
         max_delay_s: float = 0.002,
         workers: int = 2,
+        tracer: Optional[Tracer] = None,
+        metrics: Optional[MetricsRegistry] = None,
     ) -> None:
         """Build the service (does not start the flush thread; see
         :meth:`start` / ``async with``).
@@ -79,19 +92,26 @@ class AsyncSpmvService:
             deadline).
           workers: thread-pool width for explicit-batch requests and
             queue-full flushes.
+          tracer: request-lifecycle span sink (default: an enabled
+            ring-buffered ``Tracer()``; pass ``Tracer(enabled=False)`` for
+            a zero-overhead no-op).
+          metrics: the service's ``MetricsRegistry`` (default: a fresh
+            one), shared with the default batcher and admission controller.
 
         Raises:
           ValueError: for est_alpha outside (0, 1].
         """
         if not 0.0 < est_alpha <= 1.0:
             raise ValueError(f"est_alpha must be in (0, 1]; got {est_alpha}")
+        self.tracer = tracer if tracer is not None else Tracer()
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.engine = engine if engine is not None else SpmvEngine()
         self.batcher = batcher if batcher is not None else MicroBatcher(
             self.engine, max_batch=max_batch, buckets=buckets,
-            auto_flush=False, max_delay_s=max_delay_s,
+            auto_flush=False, max_delay_s=max_delay_s, metrics=self.metrics,
         )
         self.admission = admission if admission is not None else \
-            AdmissionController(safety=safety)
+            AdmissionController(safety=safety, metrics=self.metrics)
         if tenants:
             for tenant, config in tenants.items():
                 self.admission.configure(tenant, config)
@@ -224,10 +244,13 @@ class AsyncSpmvService:
 
         Raises:
           RequestRejected: the admission controller refused the request
-            (``.reason`` in REJECT_REASONS) or the service is closed.
+            (``.reason`` in REJECT_REASONS — including the queue-aware
+            ``queue_wait_infeasible`` under backlog) or the service is
+            closed.
           KeyError: unknown matrix name for this tenant.
           TypeError/ValueError: dtype/shape mismatch with the matrix.
         """
+        t_start = obs_clock()
         if self._closed:
             self.admission.reject_all(tenant, "shutdown")
             raise RequestRejected(tenant, "shutdown", "service is closed")
@@ -247,19 +270,43 @@ class AsyncSpmvService:
             )
         vectors = x.shape[1] if x.ndim == 2 else 1
         estimate = self._est.get(rname)
-        self.admission.admit(
-            tenant, vectors=vectors, deadline_s=deadline_s,
-            estimate_s=estimate,
-        )
+        # queued vectors ahead of this request (the batcher queue it would
+        # join); drives the controller's wait+service feasibility model
+        depth = self.batcher.pending(rname)
+        trace = self.tracer.trace(f"{tenant}/{name}")
+        ctx = trace if trace.enabled else None
+        try:
+            self.admission.admit(
+                tenant, vectors=vectors, deadline_s=deadline_s,
+                estimate_s=estimate, queue_depth=depth,
+            )
+        except RequestRejected as rej:
+            if ctx is not None:
+                ctx.add("admit", t_start, obs_clock(), outcome=rej.reason,
+                        queue_depth=depth)
+            raise
         loop = asyncio.get_running_loop()
         t0 = loop.time()
         try:
+            t_admitted = obs_clock()
+            if ctx is not None:
+                ctx.add("admit", t_start, t_admitted, outcome="admitted",
+                        queue_depth=depth, vectors=vectors)
             if x.ndim == 2:
-                backend = self._pool.submit(self.engine.multiply, rname, x)
+                # explicit batch: the wait for a worker thread is this
+                # request's queue time
+                def run_explicit():
+                    t_run = obs_clock()
+                    if ctx is not None:
+                        ctx.add("queue_wait", t_admitted, t_run)
+                    return self.engine.multiply(rname, x, obs=ctx)
+
+                backend = self._pool.submit(run_explicit)
             else:
                 backend = self.batcher.submit(
                     rname, x,
                     deadline_s=self._flush_budget(deadline_s, estimate),
+                    ctx=ctx,
                 )
                 if self.batcher.pending(rname) >= self.batcher.max_batch:
                     # full queue: flush from a worker, never the event loop
@@ -272,7 +319,15 @@ class AsyncSpmvService:
             except Exception:
                 self.errors += 1
                 raise
+            t_end = obs_clock()
+            if ctx is not None:
+                # deliver: backend done -> this coroutine resumed with the
+                # result; tiles the trace out to the caller-visible end
+                ctx.add("deliver",
+                        ctx.last_end if ctx.last_end is not None else t_end,
+                        t_end)
             self._observe(rname, loop.time() - t0)
+            self._record_metrics(rname, t_end - t_start)
             self.served += 1
             return y
         finally:
@@ -315,6 +370,27 @@ class AsyncSpmvService:
                             self.est_alpha * sample
                             + (1.0 - self.est_alpha) * old)
 
+    def _record_metrics(self, rname: str, e2e_s: float) -> None:
+        """Fold one completed request into the metrics registry.
+
+        Per-phase series come from the engine telemetry record of the batch
+        that served this request (riders of one coalesced batch observe the
+        same batch-level phase times — that once IS each rider's kernel
+        time); cache hit/miss gauges mirror the engine's PlanCache stats.
+        """
+        m = self.metrics
+        m.histogram("serve.latency.e2e_ms").observe(e2e_s * 1e3)
+        rec = self.engine.telemetry.last(rname)
+        if rec is not None:
+            m.histogram("serve.phase.load_ms").observe(rec.load_s * 1e3)
+            m.histogram("serve.phase.kernel_ms").observe(rec.kernel_s * 1e3)
+            m.histogram("serve.phase.retrieve_ms").observe(
+                rec.retrieve_s * 1e3)
+        st = self.engine.cache.stats
+        m.gauge("engine.plan_cache.hits").set(st.hits)
+        m.gauge("engine.plan_cache.misses").set(st.misses)
+        m.gauge("engine.plan_cache.evictions").set(st.evictions)
+
     def estimate(self, tenant: Optional[str], name: str) -> Optional[float]:
         """The observed service-time EWMA shedding compares deadlines to."""
         try:
@@ -334,4 +410,5 @@ class AsyncSpmvService:
             "batches_run": self.batcher.batches_run,
             "vectors_run": self.batcher.vectors_run,
             "tenants": self.admission.snapshot(),
+            "metrics": self.metrics.snapshot(),
         }

@@ -26,12 +26,21 @@ import sys
 
 
 def load_rows(path: str) -> dict:
-    """{name: us_per_call} from a benchmarks/run.py --json document."""
+    """{name: us_per_call} from a benchmarks/run.py --json document.
+
+    Rows tagged ``"kind": "count"`` (e.g. serve.shed.* shed-by-reason
+    counters) carry event counts in the us_per_call slot, not wall-clock —
+    they ride in the JSON for trajectory tracking but are excluded here, so
+    the regression gate (and its missing-row check) only ever compares
+    timings against timings.
+    """
     with open(path, encoding="utf-8") as fh:
         doc = json.load(fh)
     rows = doc["rows"] if isinstance(doc, dict) else doc
     out = {}
     for r in rows:
+        if r.get("kind") == "count":
+            continue
         out[r["name"]] = float(r["us_per_call"])
     return out
 

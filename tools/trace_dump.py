@@ -1,0 +1,110 @@
+#!/usr/bin/env python
+"""Replay a seeded serving workload and dump its spans as a Chrome trace.
+
+    PYTHONPATH=src python tools/trace_dump.py [--out serve_trace.json]
+                                              [--requests N] [--seed S]
+                                              [--top K]
+
+Runs a small two-tenant replay against an in-process
+:class:`repro.serve.AsyncSpmvService` (same shape as the serve benchmark's
+smoke workload), then:
+
+  * writes the tracer's span buffer as Chrome ``chrome://tracing`` JSON —
+    load the file at https://ui.perfetto.dev, each request is one timeline
+    row decomposed into admit / queue_wait / batch_form / load / kernel /
+    retrieve / deliver spans, and
+  * prints the ``--top`` slowest requests' phase breakdowns to stdout, so
+    one artifact shows the full life of the worst request without leaving
+    the terminal.
+
+The span math lives in :mod:`repro.obs.tracing` (:func:`chrome_trace`,
+:func:`trace_summary`); this script is only the harness around it.
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import sys
+
+
+def build_service():
+    from repro.data.matrices import regular_matrix, scale_free_matrix
+    from repro.engine import SpmvEngine
+    from repro.serve import AsyncSpmvService, TenantConfig
+
+    service = AsyncSpmvService(
+        SpmvEngine(cache_capacity=8),
+        tenants={"tenant-a": TenantConfig(max_pending=128),
+                 "tenant-b": TenantConfig(max_pending=128)},
+    )
+    service.register(None, "social", scale_free_matrix(96, 128, 700, seed=0))
+    service.register(None, "mesh", regular_matrix(96, 128, 5, seed=1))
+    return service
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", metavar="PATH", default="serve_trace.json",
+                    help="Chrome/Perfetto trace JSON output path")
+    ap.add_argument("--requests", type=int, default=48,
+                    help="replayed trace length")
+    ap.add_argument("--seed", type=int, default=21)
+    ap.add_argument("--top", type=int, default=3,
+                    help="print the K slowest requests' phase breakdowns")
+    args = ap.parse_args(argv)
+
+    from repro.obs.tracing import chrome_trace, trace_summary
+    from repro.serve import WorkloadSpec, generate_trace, replay
+
+    service = build_service()
+    spec = WorkloadSpec(
+        names=("social", "mesh"),
+        tenants=("tenant-a", "tenant-b"),
+        n_requests=args.requests,
+        seed=args.seed,
+        zipf_alpha=1.2,
+        rate_rps=2000.0,
+        arrivals="bursty",
+        batch_mix={1: 0.85, 4: 0.1, 8: 0.05},
+    )
+
+    async def run():
+        async with service:
+            # warmup pays compilation so the dumped trace shows serving, not
+            # the first-touch compile of each batch bucket
+            await replay(service, generate_trace(WorkloadSpec(
+                names=spec.names, tenants=spec.tenants,
+                n_requests=max(16, args.requests // 4), seed=args.seed + 1,
+                batch_mix=spec.batch_mix,
+            )), time_scale=0.0)
+            service.tracer.clear()
+            report = await replay(service, generate_trace(spec),
+                                  time_scale=0.0)
+            return report, service.tracer.spans()
+
+    report, spans = asyncio.run(run())
+
+    with open(args.out, "w", encoding="utf-8") as fh:
+        json.dump(chrome_trace(spans), fh)
+    print(f"wrote {args.out}: {len(spans)} spans from "
+          f"{report.completed} completed requests "
+          f"(span coverage {report.span_coverage:.3f})")
+
+    summaries = trace_summary(spans)
+    worst = sorted(summaries.values(), key=lambda t: t["total_s"],
+                   reverse=True)[: args.top]
+    for rank, t in enumerate(worst, 1):
+        phases = " ".join(
+            f"{name}={dur * 1e3:.3f}ms"
+            for name, dur in sorted(t["phases"].items(),
+                                    key=lambda kv: -kv[1])
+        )
+        print(f"#{rank} {t['label']}: {t['total_s'] * 1e3:.3f}ms e2e, "
+              f"coverage {t['coverage']:.3f}")
+        print(f"    {phases}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
