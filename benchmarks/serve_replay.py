@@ -4,6 +4,7 @@
                                                      [--json BENCH_serve.json]
                                                      [--trace OUT.json]
                                                      [--requests N]
+                                                     [--workers N]
 
 Fires a seeded Zipfian/bursty trace (two tenants, mixed vector/batch
 requests) at an :class:`~repro.serve.AsyncSpmvService` and prints
@@ -13,6 +14,20 @@ a queue-wait p95 row, a reject-rate row, plus shed-by-reason count rows
 every other benchmark emits, so ``tools/check_bench.py`` can gate a fresh
 run against the committed ``BENCH_serve.json`` baseline and CI can upload
 the JSON as the perf trajectory.
+
+``--workers N`` additionally runs the **cluster scaling replay**: the same
+integer-valued workload is blasted through a
+:class:`~repro.cluster.ClusterRouter` at worker counts {1, N} by spawned
+load-generator processes, every reply verified bit-exactly against the
+dense oracle, and ``serve.cluster.w<K>.us_per_req`` rows are emitted with
+``gate_factor: 8.0`` (cross-process wall-clock folds in process scheduling
+and socket round-trips — far noisier than one process's kernel loop, so
+those rows gate looser without touching the single-process gates).  The
+run FAILS if any request is lost or any reply mismatches; on machines
+with >= 2 CPUs it also fails if N workers do not beat 1 worker on
+accepted requests/s — the scaling claim the tier exists for.  With
+``--trace`` the per-worker span buffers are merged into one cluster
+timeline (one Perfetto ``pid`` per worker).
 
 ``--trace OUT.json`` dumps the final measured replay's request spans as
 Chrome/Perfetto trace JSON (load it at https://ui.perfetto.dev or
@@ -30,6 +45,7 @@ admitted before (that *is* a serving regression).
 """
 import argparse
 import json
+import os
 import sys
 
 import numpy as np
@@ -54,6 +70,94 @@ def build_service():
     return service, mats
 
 
+def run_cluster(args, n: int, row, trace_path=None) -> int:
+    """The ``--workers N`` cluster scaling replay (rows appended via ``row``).
+
+    Returns 0 on success, 1 on lost/mismatched requests or (on multi-CPU
+    machines) a failed scaling claim.
+    """
+    from repro.cluster import ClusterRouter
+    from repro.cluster.replay import replay_generators
+    from repro.data.matrices import regular_matrix, scale_free_matrix
+    from repro.serve import WorkloadSpec, generate_trace
+
+    # integer-valued matrices: float32 SpMV over small integers is exact in
+    # any summation order, so "accepted" can mean "bit-exact vs the oracle"
+    mats = {
+        "social": np.round(scale_free_matrix(96, 128, 700, seed=0) * 2.0),
+        "mesh": np.round(regular_matrix(96, 128, 5, seed=1) * 2.0),
+    }
+    spec = WorkloadSpec(
+        names=tuple(mats), tenants=("tenant-a", "tenant-b"),
+        n_requests=n, seed=args.seed, zipf_alpha=1.2, rate_rps=2000.0,
+        arrivals="bursty", batch_mix={1: 0.85, 4: 0.1, 8: 0.05},
+        integer_values=True,
+    )
+    warm = generate_trace(WorkloadSpec(
+        names=spec.names, n_requests=max(8, n // 4), seed=args.seed + 1,
+        batch_mix=spec.batch_mix, integer_values=True,
+    ))
+    trace = generate_trace(spec)
+    counts = sorted({1, args.workers})
+    rps, fails = {}, []
+    print(f"# --- serve.cluster: {counts} worker replays "
+          f"({len(trace)} reqs, {args.cluster_generators} generators)")
+    for w in counts:
+        with ClusterRouter(workers=w) as router:
+            for name, a in mats.items():
+                # both names absorb ~all traffic (a 2-name Zipf head is all
+                # head): replicate to every worker so round-robin spreads
+                # load — the placement the popularity policy converges to
+                router.register(name, a, replicas=w)
+            replay_generators(router, warm, mats,
+                              generators=args.cluster_generators)  # discarded
+            best = None
+            for _ in range(max(1, args.cluster_repeats)):
+                rep = replay_generators(
+                    router, trace, mats, generators=args.cluster_generators,
+                )
+                if rep.lost or not rep.bit_exact:
+                    fails.append(f"w{w}: lost={rep.lost} "
+                                 f"mismatched={rep.mismatched}")
+                if best is None or rep.accepted_rps > best.accepted_rps:
+                    best = rep
+            if trace_path is not None and w == max(counts):
+                merged = router.dump_traces()
+                with open(trace_path, "w", encoding="utf-8") as fh:
+                    json.dump(merged, fh)
+                print(f"# wrote {trace_path} "
+                      f"({len(merged['traceEvents'])} events, {w} workers)",
+                      file=sys.stderr)
+        rps[w] = best.accepted_rps
+        derived = (f"accepted={best.accepted}/{best.requests} "
+                   f"rps={best.accepted_rps:.0f} "
+                   f"per_worker={best.per_worker}")
+        # gate_factor 8.0: see module docstring — cross-process rows gate
+        # looser in the committed baseline without touching other gates
+        row(f"serve.cluster.w{w}.us_per_req",
+            best.wall_s / max(1, best.accepted) * 1e6, derived,
+            gate_factor=8.0)
+        row(f"serve.cluster.w{w}.lost", float(best.lost),
+            "requests neither answered nor shed", kind="count")
+        row(f"serve.cluster.w{w}.shed", float(len(best.shed)),
+            f"reasons={sorted({s['reason'] for s in best.shed})}",
+            kind="count")
+    hi = max(counts)
+    if hi > 1:
+        speedup = rps[hi] / rps[1] if rps[1] > 0 else 0.0
+        row(f"serve.cluster.w{hi}.speedup_x", speedup,
+            f"accepted-rps vs 1 worker ({os.cpu_count()} CPUs)",
+            kind="count")
+        if os.cpu_count() and os.cpu_count() >= 2 and speedup <= 1.0:
+            fails.append(
+                f"w{hi} did not beat w1: {rps[hi]:.0f} vs {rps[1]:.0f} rps"
+            )
+    if fails:
+        print(f"FAIL (cluster): {'; '.join(fails)}", file=sys.stderr)
+        return 1
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -67,6 +171,14 @@ def main(argv=None) -> int:
                     help="trace length (default: 48 smoke / 160 full)")
     ap.add_argument("--repeats", type=int, default=3,
                     help="measured replays; rows are row-wise medians")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="also run the cluster scaling replay at worker "
+                         "counts {1, N} and emit serve.cluster.* rows")
+    ap.add_argument("--cluster-generators", type=int, default=2,
+                    help="spawned load-generator processes per cluster run")
+    ap.add_argument("--cluster-repeats", type=int, default=2,
+                    help="measured cluster replays; the best rps repeat is "
+                         "reported (cross-process noise floor)")
     ap.add_argument("--seed", type=int, default=21)
     args = ap.parse_args(argv)
 
@@ -124,10 +236,14 @@ def main(argv=None) -> int:
           "median over repeats)")
     rows = []
 
-    def row(name: str, us: float, extra: str = "", kind: str = None) -> None:
+    def row(name: str, us: float, extra: str = "", kind: str = None,
+            gate_factor: float = None) -> None:
         r = {"name": name, "us_per_call": round(us, 1), "derived": extra}
         if kind is not None:
             r["kind"] = kind  # count rows are exempt from the perf gate
+        if gate_factor is not None:
+            r["gate_factor"] = gate_factor  # per-row override of the
+            # check_bench threshold (committed baseline side only)
         rows.append(r)
         print(f"{name},{us:.1f},{extra}")
 
@@ -167,6 +283,12 @@ def main(argv=None) -> int:
         print(f"FAIL: lost={lost} errors={errors}", file=sys.stderr)
         return 1
 
+    cluster_rc = 0
+    if args.workers:
+        # cluster mode owns --trace: the artifact becomes the merged
+        # per-worker timeline instead of the single-process span dump
+        cluster_rc = run_cluster(args, n, row, trace_path=args.trace)
+
     if args.json:
         doc = {
             "version": 1,
@@ -178,13 +300,13 @@ def main(argv=None) -> int:
             json.dump(doc, fh, indent=2, sort_keys=True)
         print(f"# wrote {args.json} ({len(rows)} rows)", file=sys.stderr)
 
-    if args.trace:
+    if args.trace and not args.workers:
         from repro.obs import chrome_trace
         with open(args.trace, "w", encoding="utf-8") as fh:
             json.dump(chrome_trace(spans), fh)
         print(f"# wrote {args.trace} ({len(spans)} spans, "
               f"coverage={report.span_coverage:.3f})", file=sys.stderr)
-    return 0
+    return cluster_rc
 
 
 if __name__ == "__main__":

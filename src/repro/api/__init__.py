@@ -28,7 +28,14 @@ from .executor import (
     SingleDeviceExecutor,
 )
 from .matrix import SparseMatrix, fingerprint_matrix
-from .plan import ExecutionPlan, fit_plan, plan_from_partitioned, resolve_scheme
+from .plan import (
+    IR_VERSION,
+    ExecutionPlan,
+    fit_plan,
+    plan_from_ir,
+    plan_from_partitioned,
+    resolve_scheme,
+)
 
 __all__ = [
     "SparseMatrix",
@@ -39,6 +46,8 @@ __all__ = [
     "fit_plan",
     "resolve_scheme",
     "plan_from_partitioned",
+    "plan_from_ir",
+    "IR_VERSION",
     "fingerprint_matrix",
     "AXIS_1D",
     "AXES_2D",

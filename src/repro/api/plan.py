@@ -35,9 +35,21 @@ from repro.core.stats import MatrixStats
 
 from .executor import AXES_2D, AXIS_1D, Executor, MeshExecutor, SingleDeviceExecutor
 
-__all__ = ["ExecutionPlan", "fit_plan", "resolve_scheme", "plan_from_partitioned"]
+__all__ = [
+    "ExecutionPlan",
+    "fit_plan",
+    "resolve_scheme",
+    "plan_from_partitioned",
+    "plan_from_ir",
+    "IR_VERSION",
+]
 
 FORMATS = ("coo", "csr", "bcoo", "bcsr")
+
+# Plan-IR format version.  Bump when the IR schema changes shape in a way an
+# older reader cannot interpret; ``plan_from_ir`` rejects unknown versions
+# instead of guessing (docs/cluster.md#ir-versioning).
+IR_VERSION = 1
 
 
 # ---------------------------------------------------------------------------
@@ -259,6 +271,62 @@ class ExecutionPlan:
             lines.append(line)
         return "\n".join(lines)
 
+    # -- serialization (plan IR) -------------------------------------------
+
+    def to_ir(self) -> dict:
+        """Serialize everything needed to *rebuild* this plan elsewhere.
+
+        The IR is a plain JSON/msgpack-able dict — no device arrays, no
+        mesh object, no matrix payload — capturing scheme, impl, dtype,
+        grid, block, interpret flag, mesh spec (shape + axis names), ring
+        chunk counts, the analytic estimate and the tuned ``measured``
+        metadata.  A worker process rehydrates it against its own device
+        pool with :func:`plan_from_ir` and compiles locally; this is how
+        plans (and :class:`repro.tune.TuningCache` winners riding in
+        ``measured``) ship across processes instead of being replanned per
+        worker (docs/cluster.md).
+
+        Returns:
+          A dict with ``ir_version`` = :data:`IR_VERSION`; stable under
+          ``json.dumps`` round-trips.
+
+        Raises:
+          ValueError: for a plan carrying a prebuilt partition (``part``),
+            which has no host-independent serial form.
+        """
+        if self.part is not None:
+            raise ValueError(
+                "plans wrapping a prebuilt PartitionedMatrix (part=...) "
+                "cannot be serialized; re-plan from the SparseMatrix instead"
+            )
+        mesh_spec = None
+        if self.is_distributed:
+            mesh_spec = {
+                "shape": [int(n) for n in self.mesh.devices.shape],
+                "axes": [str(a) for a in self.axes],
+            }
+        return {
+            "ir_version": IR_VERSION,
+            "scheme": {
+                "partitioning": self.scheme.partitioning,
+                "scheme": self.scheme.scheme,
+                "fmt": self.scheme.fmt,
+                "merge": self.scheme.merge,
+                "grid": [int(g) for g in self.scheme.grid],
+                "reason": self.scheme.reason,
+            },
+            "impl": self.impl,
+            "dtype": np.dtype(self.dtype).name,
+            "block": [int(b) for b in self.block],
+            "interpret": bool(self.interpret),
+            "ring": bool(self.ring),
+            "ring_counts": (None if self.ring_counts is None
+                            else np.asarray(self.ring_counts).tolist()),
+            "mesh": mesh_spec,
+            "estimate": {k: float(v) for k, v in self.estimate.items()},
+            "measured": _jsonable(self.measured),
+        }
+
     # -- axes / specs ------------------------------------------------------
 
     @property
@@ -394,4 +462,111 @@ def plan_from_partitioned(
         matrix=matrix, scheme=plan, impl=impl, mesh=mesh,
         dtype=np.dtype(part.dtype), block=part.block, part=part,
         ring=ring, ring_counts=ring_counts,
+    )
+
+
+def _jsonable(obj):
+    """Deep-copy ``obj`` into plain JSON types (dict/list/str/float/int/
+    bool/None).  numpy scalars and arrays are converted; anything else is
+    rejected loudly — a plan IR must never smuggle live objects."""
+    if obj is None or isinstance(obj, (str, bool, int)):
+        return obj
+    if isinstance(obj, float):
+        return float(obj)
+    if isinstance(obj, np.generic):
+        return obj.item()
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    raise TypeError(f"not IR-serializable: {type(obj).__name__}: {obj!r}")
+
+
+def plan_from_ir(ir: dict, matrix, *, devices=None, mesh=None,
+                 hw: Optional[HardwareModel] = None) -> ExecutionPlan:
+    """Rehydrate an :meth:`ExecutionPlan.to_ir` record against this process.
+
+    The inverse of ``to_ir``: rebuilds the fitted adaptive plan verbatim (no
+    re-fitting, no re-tuning — the IR *is* the already-fitted decision), lays
+    the recorded mesh spec out on this process's devices, and reattaches the
+    tuned ``measured`` metadata, so ``plan_from_ir(ir, sm).compile()``
+    reproduces the original executor bit for bit with zero re-measurements.
+
+    Args:
+      ir: a ``to_ir()`` dict (possibly JSON round-tripped).
+      matrix: the :class:`~repro.api.matrix.SparseMatrix` the plan is for
+        (matrix payloads ship separately from plans; see docs/cluster.md).
+      devices: device pool to lay the recorded mesh on (default: all local
+        devices).  Ignored for single-device plans.
+      mesh: an existing mesh matching the recorded spec (skips building one).
+      hw: optional HardwareModel to attach (cosmetic; estimates ride the IR).
+
+    Returns:
+      An :class:`ExecutionPlan` whose ``scheme_id``/``describe()`` match the
+      serialized plan exactly.
+
+    Raises:
+      ValueError: unknown ``ir_version``, malformed record, or too few
+        devices for the recorded mesh shape.
+    """
+    version = ir.get("ir_version")
+    if version != IR_VERSION:
+        raise ValueError(
+            f"unknown plan-IR version {version!r} (this reader speaks "
+            f"{IR_VERSION}); re-export the plan with a matching writer"
+        )
+    try:
+        s = ir["scheme"]
+        plan = Plan(
+            partitioning=s["partitioning"],
+            scheme=s["scheme"],
+            fmt=s["fmt"],
+            merge=s["merge"],
+            grid=tuple(int(g) for g in s["grid"]),
+            reason=s.get("reason", "rehydrated from plan IR"),
+        )
+        impl = ir["impl"]
+        dtype = np.dtype(ir["dtype"])
+        block = tuple(int(b) for b in ir.get("block", (8, 16)))
+        mesh_spec = ir.get("mesh")
+    except (KeyError, TypeError) as e:
+        raise ValueError(f"malformed plan IR: {type(e).__name__}: {e}") from e
+    if plan.fmt not in FORMATS:
+        raise ValueError(f"plan IR carries unknown format {plan.fmt!r}")
+    if impl not in ("xla", "pallas"):
+        raise ValueError(f"plan IR carries unknown impl {impl!r}")
+    if mesh is None and mesh_spec is not None:
+        shape = tuple(int(n) for n in mesh_spec["shape"])
+        axes = tuple(str(a) for a in mesh_spec["axes"])
+        n = int(np.prod(shape))
+        if devices is None:
+            import jax
+
+            devices = jax.devices()
+        devices = list(devices)
+        if len(devices) < n:
+            raise ValueError(
+                f"plan IR needs a {shape} mesh ({n} devices); this process "
+                f"has {len(devices)} — re-fit the plan instead of rehydrating"
+            )
+        from repro import compat
+
+        mesh = compat.make_mesh(shape, axes, devices=devices[:n])
+    ring_counts = ir.get("ring_counts")
+    return ExecutionPlan(
+        matrix=matrix,
+        scheme=plan,
+        impl=impl,
+        mesh=mesh if mesh_spec is not None else None,
+        dtype=dtype,
+        block=block,
+        interpret=bool(ir.get("interpret", True)),
+        hw=hw,
+        estimate=dict(ir.get("estimate") or {}),
+        ring=bool(ir.get("ring", False)),
+        ring_counts=(None if ring_counts is None
+                     else np.asarray(ring_counts, dtype=np.int64)),
+        measured=dict(ir.get("measured") or {}),
     )

@@ -1,0 +1,76 @@
+"""repro.cluster — multi-process serving: plan IR + workers + router.
+
+SparseP's results come from orchestrating thousands of PIM cores from a
+host-side software stack that decides data placement and work routing above
+the kernels (paper §4); the ROADMAP's serving analogue is this package — it
+scales :mod:`repro.serve` past one Python process:
+
+  * :mod:`protocol` — the length-prefixed AF_UNIX wire protocol every
+    router<->worker and generator<->worker byte moves through, and the
+    failure taxonomy (``WorkerLostError`` carries the ``worker_lost`` shed
+    reason) failover keys on.
+  * :mod:`worker` — one process, one private JAX runtime, one
+    :class:`~repro.engine.SpmvEngine`; plans arrive as
+    ``ExecutionPlan.to_ir()`` records and exported
+    :class:`~repro.tune.TuningCache` slices, so a worker rehydrates tuned
+    winners with **zero re-measurements** (its cache hit counters are the
+    proof, surfaced by the ``stats`` verb).
+  * :mod:`router` — consistent-hash placement over matrix fingerprints
+    (:class:`HashRing`), popularity-aware replication of the hot head,
+    and failover: a dead worker's matrices re-register on the ring's next
+    choice from the router's host-side copies, mid-flight requests retry.
+  * :mod:`replay` — the scaled replay harness: router-mode (threads, full
+    failover on the path — the kill-a-worker probe) and generator-mode
+    (``spawn``-ed JAX-free load processes hitting worker sockets
+    directly), both verifying every reply bit-exactly against the dense
+    oracle.
+
+Quickstart (``examples/cluster_quickstart.py`` runs this end to end)::
+
+    from repro.cluster import ClusterRouter
+
+    with ClusterRouter(workers=2) as router:
+        router.register("A", a)                 # placed by fingerprint
+        y = router.multiply("A", x)             # routed, verified upstream
+        router.stats()                          # placements + worker stats
+
+See docs/cluster.md for the protocol, placement policy, failover
+semantics and IR versioning contract.
+"""
+
+from .protocol import (
+    ConnectionClosed,
+    RemoteError,
+    WorkerClient,
+    WorkerLostError,
+    recv_msg,
+    send_msg,
+)
+from .replay import (
+    ClusterReport,
+    generator_main,
+    replay_cluster,
+    replay_generators,
+)
+from .router import ClusterEntry, ClusterRouter, HashRing
+from .worker import WorkerConfig, WorkerHandle, spawn_worker, worker_main
+
+__all__ = [
+    "ClusterRouter",
+    "ClusterEntry",
+    "HashRing",
+    "WorkerConfig",
+    "WorkerHandle",
+    "spawn_worker",
+    "worker_main",
+    "WorkerClient",
+    "WorkerLostError",
+    "RemoteError",
+    "ConnectionClosed",
+    "send_msg",
+    "recv_msg",
+    "ClusterReport",
+    "replay_cluster",
+    "replay_generators",
+    "generator_main",
+]

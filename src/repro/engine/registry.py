@@ -45,6 +45,21 @@ class RegisteredMatrix:
     batch_ewma: Optional[float] = None  # EWMA of served batch widths; when
     # it drifts drift_factor x away from tuned_batch, the engine re-tunes
 
+    def summary(self) -> dict:
+        """JSON-safe identity + serving state — what crosses a process
+        boundary (the cluster worker's ``stats`` verb) without dragging
+        the host-side matrix or live plan objects along."""
+        return {
+            "name": self.name,
+            "fingerprint": self.fingerprint,
+            "shape": tuple(self.shape),
+            "dtype": self.dtype,
+            "scheme_id": self.plan.tag,
+            "impl": self.cache_key[4],
+            "requests": self.requests,
+            "tuned": self.tuned,
+        }
+
 
 class MatrixRegistry:
     """name -> RegisteredMatrix.  Thin, but the one place names resolve."""

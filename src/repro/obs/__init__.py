@@ -35,6 +35,7 @@ from .tracing import (
     Trace,
     Tracer,
     chrome_trace,
+    merge_chrome_traces,
     trace_summary,
 )
 
@@ -46,6 +47,7 @@ __all__ = [
     "NULL_TRACE",
     "Tracer",
     "chrome_trace",
+    "merge_chrome_traces",
     "trace_summary",
     "Counter",
     "Gauge",

@@ -46,6 +46,7 @@ __all__ = [
     "NULL_TRACE",
     "Tracer",
     "chrome_trace",
+    "merge_chrome_traces",
     "trace_summary",
 ]
 
@@ -255,6 +256,46 @@ def chrome_trace(spans: Iterable[Span]) -> dict:
     for tid, label in seen_tids.items():
         events.append({
             "name": "thread_name", "ph": "M", "pid": 1, "tid": tid,
+            "args": {"name": label},
+        })
+    return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+
+def merge_chrome_traces(docs: Iterable[dict],
+                        labels: Optional[List[str]] = None) -> dict:
+    """Merge per-process Chrome trace documents into one cluster timeline.
+
+    Each input document (one :func:`chrome_trace` output per worker)
+    becomes one Perfetto *process* row: its events are re-stamped with
+    ``pid`` = 1-based document index and its ``process_name`` metadata is
+    replaced by the worker's label, so a ``--workers N`` replay renders as
+    N labeled process groups in a single viewer tab.
+
+    Timestamps stay relative to each document's own t0: workers run their
+    own monotonic clocks, so cross-process offsets are not meaningful and
+    re-basing would fabricate an alignment that was never measured.
+
+    Args:
+      docs: Chrome trace dicts (``{"traceEvents": [...]}``); empty or
+        event-less documents still claim a pid so labels stay aligned.
+      labels: per-document process names (default ``worker-<i>``).
+
+    Returns:
+      One merged Chrome/Perfetto trace document.
+    """
+    labels = list(labels) if labels is not None else []
+    events: List[dict] = []
+    for i, doc in enumerate(docs):
+        pid = i + 1
+        label = labels[i] if i < len(labels) else f"worker-{i}"
+        for ev in doc.get("traceEvents", []):
+            if ev.get("ph") == "M" and ev.get("name") == "process_name":
+                continue  # replaced by the per-worker name below
+            ev = dict(ev)
+            ev["pid"] = pid
+            events.append(ev)
+        events.append({
+            "name": "process_name", "ph": "M", "pid": pid,
             "args": {"name": label},
         })
     return {"traceEvents": events, "displayTimeUnit": "ms"}

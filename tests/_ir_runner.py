@@ -1,0 +1,67 @@
+"""Subprocess body for the plan-IR round-trip grid (4 forced fake devices
+must be set before jax initializes).  Invoked by tests/test_plan_ir.py;
+prints sentinel lines the test asserts on.
+
+Covers the acceptance grid: for every format x dtype x {single, 1D, 2D}
+cell (plus the named 1D balance / 2D scheme variants), ``to_ir()`` ->
+``json`` round-trip -> ``plan_from_ir()`` -> ``compile()`` must preserve
+``scheme_id`` and ``describe()`` exactly and produce **bit-identical**
+SpMV and SpMM results vs the original executor — the property that makes
+shipping plans to cluster workers sound (docs/cluster.md#plan-ir).
+"""
+import json
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.api import SparseMatrix, plan_from_ir
+from repro.data.matrices import block_matrix
+
+
+def roundtrip(sm, cell: str, **plan_kw) -> None:
+    p1 = sm.plan(**plan_kw)
+    ir = json.loads(json.dumps(p1.to_ir()))  # force a real wire round-trip
+    p2 = plan_from_ir(ir, sm, devices=jax.devices())
+    ok = (p2.scheme_id == p1.scheme_id and p2.describe() == p1.describe())
+    if ok:
+        rng = np.random.default_rng(7)
+        x = rng.standard_normal(sm.shape[1]).astype(sm.dtype)
+        X = rng.standard_normal((sm.shape[1], 3)).astype(sm.dtype)
+        e1, e2 = p1.compile(), p2.compile()
+        ok = (np.array_equal(np.asarray(e1(x)), np.asarray(e2(x)))
+              and np.array_equal(np.asarray(e1.batch(X)),
+                                 np.asarray(e2.batch(X))))
+    print(f"IR roundtrip {cell}: {'OK' if ok else 'FAIL'}")
+
+
+def main():
+    print(f"DEVICES {jax.device_count()}")
+    if jax.device_count() < 4:
+        print("IR SKIP")
+        return
+    a32 = block_matrix(96, 128, block=(8, 16), block_density=0.3, seed=3)
+    for dtype in ("float32", "bfloat16"):
+        a = a32.astype(np.dtype(jnp.bfloat16)) if dtype == "bfloat16" else a32
+        sm = SparseMatrix.from_dense(a)
+        for fmt in ("coo", "csr", "bcoo", "bcsr"):
+            roundtrip(sm, f"{fmt}.single.{dtype}", fmt=fmt)
+            roundtrip(sm, f"{fmt}.1d.{dtype}", scheme="1d", fmt=fmt,
+                      devices=jax.devices())
+            roundtrip(sm, f"{fmt}.2d.{dtype}", scheme="2d", fmt=fmt,
+                      devices=jax.devices())
+    # named scheme variants (float32 coo: scheme identity, not kernels,
+    # is what varies here)
+    sm = SparseMatrix.from_dense(a32)
+    for scheme in ("1d.rows", "1d.nnz", "2d.equally-sized",
+                   "2d.equally-wide", "2d.variable-sized"):
+        roundtrip(sm, f"scheme.{scheme}", scheme=scheme, fmt="coo",
+                  devices=jax.devices())
+    print("IR DONE")
+
+
+if __name__ == "__main__":
+    main()

@@ -4,13 +4,21 @@
 Compares a fresh ``benchmarks/run.py --smoke --json`` output against the
 committed ``BENCH_smoke.json`` baseline, row by row (matched on the CSV
 ``name`` column), and fails when any row's wall-clock regresses by more
-than ``--threshold`` (default 2.5x — tiny-shape CPU timings are dispatch-
-dominated and noisy across runner generations, so the gate catches
+than its gate (default ``--threshold`` 2.5x — tiny-shape CPU timings are
+dispatch-dominated and noisy across runner generations, so the gate catches
 catastrophic regressions like an accidental retrace per call, not 10%
 drift).  A row present in the baseline but missing from the current run
 also fails: a silently vanished benchmark is exactly the wiring rot the
 smoke run exists to catch.  New rows (current-only) are reported but pass —
 adding a benchmark must not require a two-step baseline dance.
+
+A baseline row may carry an optional ``"gate_factor"`` field overriding the
+global threshold **for that row only** — e.g. the ``serve.cluster.*`` rows
+gate at 8x because a multi-process replay's wall-clock folds in process
+scheduling and socket round-trips, far noisier than a single-process
+kernel loop.  Per-row gates can only be set in the *committed baseline*
+(review-gated), never by the current run, so a regression cannot loosen
+its own gate.
 
     python tools/check_bench.py --baseline BENCH_smoke.json \
         --current bench_out.json [--threshold 2.5]
@@ -25,24 +33,27 @@ import json
 import sys
 
 
-def load_rows(path: str) -> dict:
-    """{name: us_per_call} from a benchmarks/run.py --json document.
+def load_rows(path: str) -> tuple[dict, dict]:
+    """({name: us_per_call}, {name: gate_factor}) from a --json document.
 
     Rows tagged ``"kind": "count"`` (e.g. serve.shed.* shed-by-reason
     counters) carry event counts in the us_per_call slot, not wall-clock —
     they ride in the JSON for trajectory tracking but are excluded here, so
     the regression gate (and its missing-row check) only ever compares
-    timings against timings.
+    timings against timings.  ``gate_factor`` is collected per row where
+    present (only the baseline's side is ever consulted).
     """
     with open(path, encoding="utf-8") as fh:
         doc = json.load(fh)
     rows = doc["rows"] if isinstance(doc, dict) else doc
-    out = {}
+    out, gates = {}, {}
     for r in rows:
         if r.get("kind") == "count":
             continue
         out[r["name"]] = float(r["us_per_call"])
-    return out
+        if r.get("gate_factor") is not None:
+            gates[r["name"]] = float(r["gate_factor"])
+    return out, gates
 
 
 def ratio_of(b: float, c: float) -> float:
@@ -55,14 +66,17 @@ def ratio_of(b: float, c: float) -> float:
     return 1.0 if c <= 0 else float("inf")
 
 
-def compare(base: dict, cur: dict, threshold: float) -> tuple[list, list, list]:
+def compare(base: dict, cur: dict, threshold: float,
+            gates: dict = None) -> tuple[list, list, list]:
     """Returns (regressions, missing, new) where regressions are
-    (name, base_us, cur_us, ratio) tuples."""
+    (name, base_us, cur_us, ratio) tuples.  ``gates`` maps row names to
+    per-row threshold overrides (from the committed baseline)."""
+    gates = gates or {}
     regressions = []
     for name in sorted(base.keys() & cur.keys()):
         b, c = base[name], cur[name]
         ratio = ratio_of(b, c)
-        if ratio > threshold:
+        if ratio > gates.get(name, threshold):
             regressions.append((name, b, c, ratio))
     missing = sorted(base.keys() - cur.keys())
     new = sorted(cur.keys() - base.keys())
@@ -76,31 +90,34 @@ def main() -> int:
     ap.add_argument("--current", default="bench_out.json",
                     help="fresh --smoke --json output")
     ap.add_argument("--threshold", type=float, default=2.5,
-                    help="fail when current/baseline exceeds this ratio")
+                    help="fail when current/baseline exceeds this ratio "
+                         "(a baseline row's gate_factor overrides it)")
     args = ap.parse_args()
 
     try:
-        base = load_rows(args.baseline)
-        cur = load_rows(args.current)
+        base, gates = load_rows(args.baseline)
+        cur, _ = load_rows(args.current)  # current-run gates never apply
     except (OSError, ValueError, KeyError, TypeError) as e:
         print(f"ERROR: unreadable benchmark JSON: {type(e).__name__}: {e}")
         return 2
 
-    regressions, missing, new = compare(base, cur, args.threshold)
+    regressions, missing, new = compare(base, cur, args.threshold, gates)
 
     shared = sorted(base.keys() & cur.keys())
     for name in shared:
         ratio = ratio_of(base[name], cur[name])
-        flag = " <-- REGRESSION" if ratio > args.threshold else ""
+        gate = gates.get(name, args.threshold)
+        flag = " <-- REGRESSION" if ratio > gate else ""
+        note = f", gate {gate}x" if name in gates else ""
         print(f"{name}: {base[name]:.1f}us -> {cur[name]:.1f}us "
-              f"({ratio:.2f}x){flag}")
+              f"({ratio:.2f}x{note}){flag}")
     for name in new:
         print(f"{name}: (new row, {cur[name]:.1f}us — no baseline yet)")
     for name in missing:
         print(f"{name}: MISSING from current run (baseline {base[name]:.1f}us)")
 
     print(f"\n{len(shared)} rows compared against {args.baseline} "
-          f"(threshold {args.threshold}x): "
+          f"(threshold {args.threshold}x, {len(gates)} per-row gates): "
           f"{len(regressions)} regressions, {len(missing)} missing, "
           f"{len(new)} new")
     if regressions or missing:

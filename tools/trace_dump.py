@@ -1,5 +1,8 @@
 #!/usr/bin/env python
-"""Replay a seeded serving workload and dump its spans as a Chrome trace.
+"""Replay a seeded serving workload and dump its spans as a Chrome trace —
+or merge already-dumped per-worker traces into one cluster timeline.
+
+Replay mode (no ``--trace`` arguments)::
 
     PYTHONPATH=src python tools/trace_dump.py [--out serve_trace.json]
                                               [--requests N] [--seed S]
@@ -17,14 +20,25 @@ smoke workload), then:
     one artifact shows the full life of the worst request without leaving
     the terminal.
 
-The span math lives in :mod:`repro.obs.tracing` (:func:`chrome_trace`,
-:func:`trace_summary`); this script is only the harness around it.
+Merge mode (one or more ``--trace`` arguments)::
+
+    PYTHONPATH=src python tools/trace_dump.py \\
+        --trace w0.json --trace w1.json --out cluster_trace.json
+
+Each input file (one Chrome trace document per worker, e.g. the per-worker
+dumps a ``serve_replay --workers N`` run leaves behind) becomes one
+Perfetto *process* row — ``pid`` = input index, ``process_name`` = the
+file's ``--label`` (or its basename) — so an N-worker replay renders as
+one cluster timeline.  The merge math lives in
+:func:`repro.obs.tracing.merge_chrome_traces`; this script is only the
+harness around it.
 """
 from __future__ import annotations
 
 import argparse
 import asyncio
 import json
+import os
 import sys
 
 
@@ -43,16 +57,48 @@ def build_service():
     return service
 
 
+def merge_traces(paths, labels, out_path: str) -> int:
+    """Merge per-worker Chrome trace files into one cluster timeline."""
+    from repro.obs.tracing import merge_chrome_traces
+
+    docs = []
+    for path in paths:
+        with open(path, encoding="utf-8") as fh:
+            docs.append(json.load(fh))
+    if labels and len(labels) != len(paths):
+        print(f"error: {len(labels)} --label for {len(paths)} --trace",
+              file=sys.stderr)
+        return 2
+    if not labels:
+        labels = [os.path.splitext(os.path.basename(p))[0] for p in paths]
+    merged = merge_chrome_traces(docs, labels=labels)
+    with open(out_path, "w", encoding="utf-8") as fh:
+        json.dump(merged, fh)
+    n_events = len(merged["traceEvents"])
+    print(f"wrote {out_path}: {n_events} events merged from "
+          f"{len(paths)} trace(s) ({', '.join(labels)})")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", metavar="PATH", default="serve_trace.json",
                     help="Chrome/Perfetto trace JSON output path")
+    ap.add_argument("--trace", metavar="PATH", action="append", default=[],
+                    help="merge mode: an existing per-worker trace JSON "
+                         "(repeatable); skips the replay entirely")
+    ap.add_argument("--label", metavar="NAME", action="append", default=[],
+                    help="merge mode: process name for the matching "
+                         "--trace (repeatable; default: file basename)")
     ap.add_argument("--requests", type=int, default=48,
                     help="replayed trace length")
     ap.add_argument("--seed", type=int, default=21)
     ap.add_argument("--top", type=int, default=3,
                     help="print the K slowest requests' phase breakdowns")
     args = ap.parse_args(argv)
+
+    if args.trace:
+        return merge_traces(args.trace, args.label, args.out)
 
     from repro.obs.tracing import chrome_trace, trace_summary
     from repro.serve import WorkloadSpec, generate_trace, replay
