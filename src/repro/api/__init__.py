@@ -27,6 +27,7 @@ from .executor import (
     MeshExecutor,
     SingleDeviceExecutor,
 )
+from .iterate import COMBINES, IterateResult, make_combine
 from .matrix import SparseMatrix, fingerprint_matrix
 from .plan import (
     IR_VERSION,
@@ -49,6 +50,9 @@ __all__ = [
     "plan_from_ir",
     "IR_VERSION",
     "fingerprint_matrix",
+    "IterateResult",
+    "make_combine",
+    "COMBINES",
     "AXIS_1D",
     "AXES_2D",
 ]

@@ -29,8 +29,10 @@ from repro.core import distributed as D
 from repro.core.partition import PartitionedMatrix
 from repro.kernels import ops
 
+from .iterate import IterateResult, run_iterate
+
 __all__ = ["Executor", "SingleDeviceExecutor", "MeshExecutor",
-           "AXIS_1D", "AXES_2D"]
+           "IterateResult", "AXIS_1D", "AXES_2D"]
 
 # Canonical mesh axis names for api-built meshes (the engine reuses these).
 AXIS_1D = "parts"
@@ -52,6 +54,55 @@ class Executor:
 
     def release(self) -> None:
         """Free device buffers held by this executor (idempotent)."""
+
+    # -- iterative-solver sessions ----------------------------------------
+
+    def iterate(self, x0, steps=None, tol=None, combine="plain", *,
+                b=None, diag=None, omega: float = 1.0,
+                max_steps: int = 1000, check_every: int = 8) -> IterateResult:
+        """Run a compiled solver loop of SpMVs with x resident on device.
+
+        One ``lax.scan`` (``steps=k``) or ``lax.while_loop`` (``tol=...``,
+        residual checked every ``check_every`` steps, bounded by
+        ``max_steps``) over ``y = A @ x`` plus the per-step ``combine``
+        (``plain`` / ``power`` / ``richardson`` / ``jacobi`` / ``cg`` or a
+        callable ``f(x, y) -> x_next``) — see :mod:`repro.api.iterate`.
+        Requires a square matrix.  The compiled loop is cached per
+        (combine, mode), so repeated solves — including with new ``b`` —
+        pay no re-trace.
+
+        Returns:
+          :class:`IterateResult` — x on host, steps executed, convergence
+          flag + residual, per-phase seconds.
+
+        Raises:
+          ValueError: non-square matrix, both/neither of steps and tol,
+            batched x0, or missing combine params (b / diag).
+          TypeError: x0 dtype cannot safely cast to the matrix dtype.
+          RuntimeError: the executor was released.
+        """
+        return run_iterate(
+            self, self._iterate_apply(), x0, steps=steps, tol=tol,
+            combine=combine, b=b, diag=diag, omega=omega,
+            max_steps=max_steps, check_every=check_every,
+        )
+
+    def _iterate_shape(self):
+        """(n, dtype) for solver loops; raises unless the matrix is square."""
+        raise NotImplementedError
+
+    def _iterate_apply(self):
+        """Traced device function, logical (n,) -> (n,)."""
+        raise NotImplementedError
+
+    @staticmethod
+    def _require_square(rows: int, cols: int):
+        if rows != cols:
+            raise ValueError(
+                f"iterate() feeds y back as the next x and therefore needs "
+                f"a square matrix; got {rows}x{cols}"
+            )
+        return cols
 
     # -- shared input validation ------------------------------------------
 
@@ -118,6 +169,31 @@ class SingleDeviceExecutor(Executor):
         if self._pallas is not None:
             return np.asarray(self._pallas(jnp.asarray(X)))
         return np.asarray(ops.spmm(self.container, jnp.asarray(X)))
+
+    # -- solver-loop backend ----------------------------------------------
+
+    def _iterate_shape(self):
+        c = self.container
+        return self._require_square(c.rows, c.cols), c.dtype
+
+    def _iterate_apply(self):
+        """y = A @ v on device — the same kernel dispatch as ``__call__``
+        (XLA oracle or the prebuilt Pallas program), cast back to the
+        matrix dtype so the recurrence matches k host-side calls bit for
+        bit (``_check_x`` applies the same cast on the host loop)."""
+        dtype = self.container.dtype
+
+        if self._pallas is not None:
+            def apply(v):
+                y = self._pallas(v)
+                return y.astype(dtype) if y.dtype != dtype else y
+            return apply
+
+        def apply(v):
+            y = ops.spmv(self.container, v, impl=self.impl,
+                         interpret=self.interpret)
+            return y.astype(dtype) if y.dtype != dtype else y
+        return apply
 
 
 class MeshExecutor(Executor):
@@ -269,6 +345,64 @@ class MeshExecutor(Executor):
     def warmup(self) -> None:
         """Trace + compile the vector-shaped program off the request path."""
         self.run_raw(self.place(np.zeros(self.part.shape[1], self.part.dtype)))
+
+    # -- solver-loop backend ----------------------------------------------
+
+    def _iterate_shape(self):
+        rows, cols = self.part.shape
+        return self._require_square(rows, cols), self.part.dtype
+
+    def _iterate_apply(self):
+        """y = A @ v entirely on the mesh: pad v to the plan's x width,
+        re-shard it with the plan's x spec (``with_sharding_constraint`` —
+        the in-jit analogue of :meth:`place`), run the shard_map program,
+        and assemble the global rows on device with the exact slice/add
+        order of :meth:`assemble`, so the recurrence stays bit-identical
+        to the host loop."""
+        if self.arrays is None:
+            raise RuntimeError("executor released or never placed; recompile")
+        n, _ = self._iterate_shape()
+        x_pad = self.x_pad
+        sharding = NamedSharding(self.mesh, self.x_spec)
+        arrays = self.arrays
+        program = self.program.jitted
+        meta = self.assemble_meta
+        rows = meta["rows"]
+        row_start = [int(r) for r in meta["row_start"]]
+        row_extent = [min(int(e), rows - r)
+                      for r, e in zip(row_start, meta["row_extent"])]
+        is_1d = self.plan is not None and self.plan.partitioning == "1d"
+        merge = self.merge
+
+        def assemble_dev(raw):
+            if not is_1d and merge == "global":
+                return raw[0, 0][:rows]
+            if not is_1d and merge in ("psum", "psum_scatter"):
+                R, C = raw.shape[:2]
+                y = jnp.zeros((rows,) + raw.shape[3:], raw.dtype)
+                for r in range(R):
+                    r0, ext = row_start[r * C], row_extent[r * C]
+                    block = (raw[r, 0] if merge == "psum"
+                             else raw[r].reshape((-1,) + raw.shape[3:]))
+                    y = y.at[r0:r0 + ext].set(block[:ext])
+                return y
+            # 1D per-part slices: duplicates on shared boundary rows are
+            # zero (the ppermute moved them), so add order matches the host
+            y = jnp.zeros((rows,) + raw.shape[2:], raw.dtype)
+            for p in range(raw.shape[0]):
+                r0, ext = row_start[p], row_extent[p]
+                y = y.at[r0:r0 + ext].add(raw[p][:ext])
+            return y
+
+        def apply(v):
+            if x_pad != n:
+                xp = jnp.pad(v, ((0, x_pad - n),))
+            else:
+                xp = v
+            xs = jax.lax.with_sharding_constraint(xp, sharding)
+            return assemble_dev(program(arrays, xs))
+
+        return apply
 
     def release(self) -> None:
         """Delete the device-placed matrix arrays (plan-cache eviction).

@@ -132,7 +132,8 @@ class ClusterEntry:
 
 
 class ClusterRouter:
-    """Spawn N engine workers and route register/multiply/drain at them.
+    """Spawn N engine workers and route register/multiply/solve/drain at
+    them.
 
     Thread-safe: replay drives ``multiply`` from many threads; placement
     mutations (registration, replication, failover) serialize on one lock
@@ -317,6 +318,57 @@ class ClusterRouter:
             getattr(last, "worker_id", "?"),
             f"no live placement for {name!r}",
         ) from last
+
+    def solve(self, name: str, x0, *, client_for=None, **solve_kwargs) -> dict:
+        """Route a whole solver session to one of ``name``'s placements.
+
+        Unlike :meth:`multiply`, a session is **never retried**: its
+        iteration state lives only in the worker that ran it, so a
+        re-run on another worker would silently restart from ``x0`` and
+        bill the caller for work that never composed.  A
+        ``WorkerLostError`` mid-session therefore still triggers
+        failover (the matrix is re-homed so *subsequent* traffic
+        survives) but the session itself is rejected — the error
+        propagates to the caller, who may resubmit knowingly.
+
+        Returns:
+          The worker's session record: ``{"x", "steps", "converged",
+          "residual", "seconds", "worker_id"}``.
+
+        Raises:
+          KeyError: unknown ``name``.
+          WorkerLostError: the session's worker died mid-run (rejected,
+            matrix re-homed), or no live placement existed to start it.
+        """
+        entry = self.entries.get(name)
+        if entry is None:
+            raise KeyError(f"matrix {name!r} is not registered "
+                           f"(registered: {sorted(self.entries)})")
+        x0 = np.asarray(x0)
+        with self._lock:
+            live = [w for w in entry.placements if self._live(w)]
+            if not live:
+                self._restore_entry(entry)
+                live = [w for w in entry.placements if self._live(w)]
+            if not live:
+                raise WorkerLostError("?", f"no live placement for {name!r}")
+            wid = live[entry.rr % len(live)]
+            entry.rr += 1
+            handle = self.workers[wid]
+        client = client_for(wid) if client_for is not None else handle.client
+        try:
+            result = client.request("solve", name=name, x0=x0, **solve_kwargs)
+        except WorkerLostError:
+            # Re-home for future traffic, then reject THIS session: a
+            # silent retry would be a silent restart.
+            self._on_worker_lost(wid)
+            raise
+        with self._lock:
+            entry.requests += int(result["steps"])
+            self.routed += int(result["steps"])
+            self._maybe_replicate()
+        result["x"] = np.asarray(result["x"])
+        return result
 
     # ----------------------------------------------------------- failover
 

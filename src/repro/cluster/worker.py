@@ -5,8 +5,8 @@ JAX runtime), a private :class:`~repro.engine.SpmvEngine`, and serves a
 small verb set over the length-prefixed protocol in
 :mod:`repro.cluster.protocol`:
 
-  ``ping / register / multiply / drain / stats / dump_trace / unregister /
-  shutdown``
+  ``ping / register / multiply / solve / drain / stats / dump_trace /
+  unregister / shutdown``
 
 Plans arrive as IR, never as live objects: ``register`` accepts an
 ``ExecutionPlan.to_ir()`` record and rehydrates it against the worker's own
@@ -181,6 +181,43 @@ class _WorkerState:
         self.metrics.counter("cluster.worker.served").inc()
         return {"y": y, "worker_id": self.config.worker_id}
 
+    def solve(self, msg) -> dict:
+        """A whole solver session on this worker's engine.
+
+        A session is *atomic*: its iteration state lives only in this
+        process, so it either completes here or dies with the worker —
+        the router must reject (never resume) a session whose worker was
+        lost mid-run.  Fields mirror ``SpmvEngine.solve``: ``name``,
+        ``x0``, and optionally ``steps`` / ``tol`` / ``combine`` /
+        ``b`` / ``diag`` / ``omega`` / ``max_steps`` / ``check_every``.
+        """
+        import numpy as np
+
+        name = msg["name"]
+        kwargs = {}
+        for k in ("steps", "tol", "combine", "omega", "max_steps",
+                  "check_every"):
+            if msg.get(k) is not None:
+                kwargs[k] = msg[k]
+        for k in ("b", "diag"):
+            if msg.get(k) is not None:
+                kwargs[k] = np.asarray(msg[k])
+        tr = self.tracer.trace(label=f"{self.config.worker_id}:{name}:solve")
+        with tr.span("serve"):
+            result = self.engine.solve(
+                name, np.asarray(msg["x0"]), obs=tr, **kwargs
+            )
+        self.served += 1
+        self.metrics.counter("cluster.worker.solved").inc()
+        return {
+            "x": np.asarray(result.x),
+            "steps": int(result.steps),
+            "converged": bool(result.converged),
+            "residual": float(result.residual),
+            "seconds": float(result.seconds),
+            "worker_id": self.config.worker_id,
+        }
+
     def drain(self, msg) -> dict:
         """Block until every in-flight multiply (other than us) completes."""
         timeout = float(msg.get("timeout", 30.0))
@@ -232,7 +269,7 @@ class _WorkerState:
             verb.startswith("_") else None
         if handler is None or verb in ("handle", "serve_connection"):
             raise ValueError(f"unknown verb {verb!r}")
-        if verb == "multiply":
+        if verb in ("multiply", "solve"):
             with self._cv:
                 self._inflight += 1
             try:

@@ -16,7 +16,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = [
     "Mesh", "NamedSharding", "P", "shard_map", "make_mesh", "set_mesh",
-    "get_abstract_mesh", "cost_analysis",
+    "get_abstract_mesh", "cost_analysis", "scan", "while_loop", "fori_loop",
+    "jit_donated",
 ]
 
 
@@ -76,6 +77,45 @@ def get_abstract_mesh():
 
     env_mesh = mesh_lib.thread_resources.env.physical_mesh
     return None if env_mesh.empty else env_mesh
+
+
+def scan(f, init, xs=None, length=None, **kwargs):
+    """``jax.lax.scan`` with the keywords every pinned release accepts.
+
+    The iterate driver (``repro.api.iterate``) runs its fixed-step solver
+    loops through this single entry point; newer-only keywords (``unroll``
+    etc.) are stripped for releases that predate them rather than crashing
+    the whole loop build.
+    """
+    try:
+        return jax.lax.scan(f, init, xs=xs, length=length, **kwargs)
+    except TypeError:
+        return jax.lax.scan(f, init, xs, length)
+
+
+def while_loop(cond, body, init):
+    """``jax.lax.while_loop`` — stable across pins; routed here so every
+    solver loop (tolerance mode) shares one shim with :func:`scan`."""
+    return jax.lax.while_loop(cond, body, init)
+
+
+def fori_loop(lower, upper, body, init):
+    """``jax.lax.fori_loop`` — the chunked residual-check inner loop."""
+    return jax.lax.fori_loop(lower, upper, body, init)
+
+
+def jit_donated(f, donate_argnums=()):
+    """``jax.jit`` with donated arguments, degrading to plain jit.
+
+    Buffer donation lets the solver loops reuse the carry's device memory
+    across iterations (x never round-trips, and never doubles up).  Some
+    backends/pins reject donation (CPU historically warned or threw for
+    some aval layouts); the loop must still run, just without the aliasing.
+    """
+    try:
+        return jax.jit(f, donate_argnums=donate_argnums)
+    except TypeError:
+        return jax.jit(f)
 
 
 def cost_analysis(compiled) -> dict:

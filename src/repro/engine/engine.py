@@ -433,6 +433,86 @@ class SpmvEngine:
                 self._maybe_refine(entry, x)
         return y
 
+    def solve(
+        self,
+        name: str,
+        x0,
+        *,
+        steps: Optional[int] = None,
+        tol: Optional[float] = None,
+        combine="plain",
+        b=None,
+        diag=None,
+        omega: float = 1.0,
+        max_steps: int = 1000,
+        check_every: int = 8,
+        obs=None,
+    ):
+        """Run an on-device solver session over registered ``name``.
+
+        One plan lookup, one compiled-loop launch
+        (:meth:`repro.api.Executor.iterate` — x stays on device across all
+        SpMVs), one Telemetry record for the whole session (``kind="solve"``
+        with the step count, so per-iteration cost is ``rec.per_iter_s``;
+        :meth:`Telemetry.last` keeps reporting per-multiply times).  An
+        evicted plan is reactivated transparently from the host-side spill —
+        a session never fails just because the LRU rotated.
+
+        Args:
+          name: handle from :meth:`register` (square matrices only).
+          x0: (n,) start vector.
+          steps / tol / combine / b / diag / omega / max_steps /
+            check_every: forwarded to ``Executor.iterate``.
+          obs: optional :class:`repro.obs.Trace` — the session's
+            load / kernel / retrieve spans are recorded on it (kernel is the
+            whole loop; ``steps`` rides as a span attribute).
+
+        Returns:
+          :class:`repro.api.IterateResult`.
+
+        Raises:
+          KeyError: unknown ``name``.
+          ValueError: non-square matrix, bad steps/tol/combine params.
+          TypeError: x0 dtype mismatch.
+        """
+        entry = self.registry.get(name)
+        try:
+            cp = self._compiled(entry)
+        except RuntimeError:
+            # evicted mid-lifetime: rebuild from the spilled partition and
+            # carry on — the session contract is one lookup, not one prayer
+            self.reactivate(name, warmup=False)
+            cp = self._compiled(entry)
+        traces_before = cp.trace_count
+        t0 = time.perf_counter()
+        with obs_profile.annotate(f"spmv_solve:{name}"):
+            result = cp.executor.iterate(
+                x0, steps=steps, tol=tol, combine=combine, b=b, diag=diag,
+                omega=omega, max_steps=max_steps, check_every=check_every,
+            )
+        if obs is not None:
+            t1 = t0 + result.load_s
+            t2 = t1 + result.kernel_s
+            for ctx in (obs if isinstance(obs, (list, tuple)) else (obs,)):
+                ctx.add("load", t0, t1)
+                ctx.add("kernel", t1, t2, steps=result.steps)
+                ctx.add("retrieve", t2, t2 + result.retrieve_s)
+        entry.requests += result.steps  # a session is `steps` SpMVs of traffic
+        warm = cp.requests_served > 0
+        cp.requests_served += 1
+        self.telemetry.record(RequestRecord(
+            name=name,
+            batch=1,
+            load_s=result.load_s,
+            kernel_s=result.kernel_s,
+            retrieve_s=result.retrieve_s,
+            cache_hit=warm,
+            traced=result.compiled or cp.trace_count > traces_before,
+            kind="solve",
+            steps=result.steps,
+        ))
+        return result
+
     # --------------------------------------------------- measure-and-refine
 
     def _make_tuner(self):

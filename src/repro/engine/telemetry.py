@@ -36,10 +36,18 @@ class RequestRecord:
     retrieve_s: float
     cache_hit: bool  # the plan had served before (steady state) vs first serve
     traced: bool  # this request triggered a (re)trace
+    kind: str = "multiply"  # "multiply" | "solve" (one record per session)
+    steps: int = 1  # SpMV steps this record covers (solve sessions > 1)
 
     @property
     def total_s(self) -> float:
         return self.load_s + self.kernel_s + self.retrieve_s
+
+    @property
+    def per_iter_s(self) -> float:
+        """Loop seconds per SpMV step — a solve session's unit cost (for a
+        multiply this is just the kernel time)."""
+        return self.kernel_s / max(1, self.steps)
 
 
 @dataclass
@@ -50,6 +58,8 @@ class _Agg:
     kernel_s: float = 0.0
     retrieve_s: float = 0.0
     traces: int = 0
+    solves: int = 0
+    solve_steps: int = 0
 
 
 class Telemetry:
@@ -72,6 +82,7 @@ class Telemetry:
         self._records: deque = deque(maxlen=max_records)
         self._by_name: Dict[str, _Agg] = {}
         self._last: Dict[str, RequestRecord] = {}
+        self._last_solve: Dict[str, RequestRecord] = {}
 
     @property
     def records(self) -> List[RequestRecord]:
@@ -79,15 +90,27 @@ class Telemetry:
         return list(self._records)
 
     def last(self, name: str) -> Optional[RequestRecord]:
-        """The most recent record for ``name`` (None before the first
-        request) — O(1); the serving layer's service-time estimator reads
-        it on every request."""
+        """The most recent *multiply* record for ``name`` (None before the
+        first request) — O(1); the serving layer's service-time estimator
+        reads it on every request.  Solve sessions are deliberately
+        excluded: a 200-step session's total would otherwise masquerade as
+        the per-multiply service time and shed every feasible multiply
+        that follows (see :meth:`last_solve`)."""
         return self._last.get(name)
+
+    def last_solve(self, name: str) -> Optional[RequestRecord]:
+        """The most recent *solve* record for ``name`` (None before the
+        first session) — the per-iteration estimator the serving layer's
+        solve-deadline feasibility check reads (``rec.per_iter_s``)."""
+        return self._last_solve.get(name)
 
     def record(self, rec: RequestRecord) -> None:
         if self._keep:
             self._records.append(rec)  # deque drops the oldest at capacity
-        self._last[rec.name] = rec
+        if rec.kind == "solve":
+            self._last_solve[rec.name] = rec
+        else:
+            self._last[rec.name] = rec
         agg = self._by_name.setdefault(rec.name, _Agg())
         agg.requests += 1
         agg.vectors += rec.batch
@@ -95,6 +118,9 @@ class Telemetry:
         agg.kernel_s += rec.kernel_s
         agg.retrieve_s += rec.retrieve_s
         agg.traces += int(rec.traced)
+        if rec.kind == "solve":
+            agg.solves += 1
+            agg.solve_steps += rec.steps
 
     def breakdown(self, name: Optional[str] = None) -> dict:
         """Fig.-17-style per-phase split (exact, full-lifetime aggregates).
@@ -113,6 +139,8 @@ class Telemetry:
                 "requests": agg.requests,
                 "vectors": agg.vectors,
                 "traces": agg.traces,
+                "solves": agg.solves,
+                "solve_steps": agg.solve_steps,
                 "total_s": total,
                 "load": agg.load_s / total if total else None,
                 "kernel": agg.kernel_s / total if total else None,
@@ -126,3 +154,4 @@ class Telemetry:
         self._records.clear()
         self._by_name.clear()
         self._last.clear()
+        self._last_solve.clear()

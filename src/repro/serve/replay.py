@@ -90,6 +90,12 @@ class SLOReport:
     verified: int = 0  # completions compared against the dense oracle
     bitexact: int = 0  # of those, bit-identical results
     max_abs_err: float = 0.0
+    # solver sessions (trace entries with solve_steps set):
+    solves: int = 0  # sessions completed
+    solves_converged: int = 0  # of those, tol reached (steps-mode: N/A -> 0)
+    solve_latency: dict = field(default_factory=dict)  # time-to-solution ms
+    solve_iters: dict = field(default_factory=dict)  # iterations per session
+    solve_per_iter_us: float = 0.0  # mean on-device us per SpMV step
 
     @property
     def reject_rate(self) -> float:
@@ -124,6 +130,11 @@ class SLOReport:
             "verified": self.verified,
             "bitexact": self.bitexact,
             "max_abs_err": self.max_abs_err,
+            "solves": self.solves,
+            "solves_converged": self.solves_converged,
+            "solve_latency": dict(self.solve_latency),
+            "solve_iters": dict(self.solve_iters),
+            "solve_per_iter_us": self.solve_per_iter_us,
         }
 
     def describe(self) -> str:
@@ -180,7 +191,31 @@ class SLOReport:
                 f"  oracle: {self.verified} verified, {self.bitexact} "
                 f"bit-exact, max|err|={self.max_abs_err:.2e}"
             )
+        if self.solves:
+            sl = self.solve_latency or _percentiles(())
+            lines.append(
+                f"  solves: {self.solves} sessions "
+                f"({self.solves_converged} converged), time-to-solution ms: "
+                f"p50={sl['p50_ms']:.2f} p99={sl['p99_ms']:.2f}, "
+                f"{self.solve_per_iter_us:.1f} us/iter"
+            )
+            if self.solve_iters:
+                si = self.solve_iters
+                lines.append(
+                    f"  iterations/session: mean={si['mean']:.1f} "
+                    f"p50={si['p50']:.0f} max={si['max']:.0f}"
+                )
         return "\n".join(lines)
+
+
+def _np_power(a: np.ndarray, x0: np.ndarray, steps: int) -> np.ndarray:
+    """Host-side power-iteration reference (mirrors the device combine)."""
+    x = x0.astype(a.dtype, copy=True)
+    for _ in range(steps):
+        y = a @ x
+        nrm = np.linalg.norm(y)
+        x = y / max(nrm, 1e-30)
+    return x
 
 
 def _aggregate_phases(telemetry) -> dict:
@@ -270,6 +305,9 @@ async def replay(
     per_tenant: Dict[str, dict] = {}
     report = SLOReport(requests=len(trace))
     reasons: Dict[str, int] = {}
+    solve_latencies: list = []  # time-to-solution per completed session
+    solve_iters: list = []
+    solve_per_iter: list = []
 
     def tstate(tenant: str) -> dict:
         return per_tenant.setdefault(tenant, {
@@ -281,9 +319,15 @@ async def replay(
         ts = tstate(req.tenant)
         t0 = loop.time()
         try:
-            y = await service.multiply(
-                req.tenant, req.name, x, deadline_s=req.deadline_s
-            )
+            if req.is_solve:
+                result = await service.solve(
+                    req.tenant, req.name, x, steps=req.solve_steps,
+                    combine=req.solve_combine, deadline_s=req.deadline_s,
+                )
+            else:
+                y = await service.multiply(
+                    req.tenant, req.name, x, deadline_s=req.deadline_s
+                )
         except RequestRejected as rej:
             resolved[i] = "rejected"
             ts["rejected"] += 1
@@ -297,14 +341,31 @@ async def replay(
             return
         latency = loop.time() - t0
         resolved[i] = "completed"
-        latencies.append(latency)
         ts["completed"] += 1
         ts["vectors"] += req.batch
-        ts["latencies"].append(latency)
         if req.infeasible:
             report.infeasible_served += 1
         if req.deadline_s is not None and latency > req.deadline_s:
             report.late += 1
+        if req.is_solve:
+            # solver sessions score on their own axis (time-to-solution,
+            # iterations); folding a k-step session into the multiply
+            # percentiles would drown the request-latency signal
+            solve_latencies.append(latency)
+            solve_iters.append(result.steps)
+            solve_per_iter.append(result.per_iter_s)
+            report.solves_converged += int(result.converged)
+            if oracles is not None and req.name in oracles \
+                    and req.solve_combine == "power":
+                expect = _np_power(oracles[req.name], x, result.steps)
+                report.verified += 1
+                err = float(np.max(np.abs(result.x - expect)))
+                report.max_abs_err = max(report.max_abs_err, err)
+                if np.array_equal(result.x, expect):
+                    report.bitexact += 1
+            return
+        latencies.append(latency)
+        ts["latencies"].append(latency)
         if oracles is not None and req.name in oracles:
             expect = oracles[req.name] @ x
             report.verified += 1
@@ -342,6 +403,16 @@ async def replay(
         ts.update(stats)
     report.per_tenant = per_tenant
     report.fairness = _jain([d["vectors"] for d in per_tenant.values()])
+    report.solves = len(solve_latencies)
+    if solve_latencies:
+        report.solve_latency = _percentiles(solve_latencies)
+        iters = np.asarray(solve_iters, dtype=np.float64)
+        report.solve_iters = {
+            "mean": float(iters.mean()),
+            "p50": float(np.percentile(iters, 50)),
+            "max": float(iters.max()),
+        }
+        report.solve_per_iter_us = float(np.mean(solve_per_iter) * 1e6)
     report.phases = _aggregate_phases(service.engine.telemetry)
     (report.phase_latency, report.queue_wait,
      report.span_coverage) = _aggregate_spans(

@@ -54,6 +54,12 @@ class ServeRequest:
     seed: int  # per-request payload seed (request_vector rebuilds x)
     deadline_s: Optional[float] = None  # SLO budget; None => best effort
     infeasible: bool = False  # stamped unmeetable: MUST be shed, not served
+    solve_steps: Optional[int] = None  # a solver session of this many steps
+    solve_combine: str = "power"  # session combine (solver sessions only)
+
+    @property
+    def is_solve(self) -> bool:
+        return self.solve_steps is not None
 
 
 @dataclass(frozen=True)
@@ -77,6 +83,14 @@ class WorkloadSpec:
       infeasible_frac: fraction of requests stamped with an expired
         deadline (0.0s) and ``infeasible=True`` — the shedding probe.
       integer_values: integer payloads for bit-exact oracle comparison.
+      solve_frac: fraction of (single-vector) requests that are solver
+        sessions instead of one-shot multiplies — the ALPHA-PIM-style
+        graph-analytics mix (power iteration over the registered graph).
+        ``0.0`` (the default) draws nothing extra, so pre-solver specs
+        generate bit-identical traces.
+      solve_steps: step count stamped on each solver session.
+      solve_combine: combine stamped on each solver session (``power``
+        needs no right-hand side, so any registered square matrix serves).
     """
 
     names: Tuple[str, ...]
@@ -95,6 +109,9 @@ class WorkloadSpec:
     deadline_s: Optional[float] = None
     infeasible_frac: float = 0.0
     integer_values: bool = False
+    solve_frac: float = 0.0
+    solve_steps: int = 16
+    solve_combine: str = "power"
 
     def __post_init__(self):
         if not self.names:
@@ -109,6 +126,10 @@ class WorkloadSpec:
             raise ValueError(f"rate_rps must be > 0, got {self.rate_rps}")
         if not 0.0 <= self.infeasible_frac <= 1.0:
             raise ValueError("infeasible_frac must be in [0, 1]")
+        if not 0.0 <= self.solve_frac <= 1.0:
+            raise ValueError("solve_frac must be in [0, 1]")
+        if self.solve_steps < 1:
+            raise ValueError(f"solve_steps must be >= 1, got {self.solve_steps}")
         if not self.batch_mix or any(w < 0 for w in self.batch_mix.values()) \
                 or sum(self.batch_mix.values()) <= 0:
             raise ValueError("batch_mix needs non-negative weights summing > 0")
@@ -157,9 +178,18 @@ def generate_trace(spec: WorkloadSpec) -> list:
         infeasible = bool(spec.infeasible_frac
                           and rng.random() < spec.infeasible_frac)
         deadline = 0.0 if infeasible else spec.deadline_s
+        # guarded draw: solve_frac == 0 consumes no randomness, keeping
+        # pre-solver specs' traces bit-identical (the determinism the perf
+        # gates replay against)
+        solve_steps, solve_combine = None, "power"
+        if spec.solve_frac and rng.random() < spec.solve_frac:
+            solve_steps = spec.solve_steps
+            solve_combine = spec.solve_combine
+            batch = 1  # a session starts from one (n,) vector
         trace.append(ServeRequest(
             t=t, tenant=tenant, name=name, batch=batch, seed=seed,
             deadline_s=deadline, infeasible=infeasible,
+            solve_steps=solve_steps, solve_combine=solve_combine,
         ))
     return trace
 
@@ -200,11 +230,13 @@ def describe_trace(trace: Sequence[ServeRequest]) -> dict:
     tenants: Dict[str, int] = {}
     widths: Dict[int, int] = {}
     infeasible = 0
+    solves = 0
     for r in trace:
         names[r.name] = names.get(r.name, 0) + 1
         tenants[r.tenant] = tenants.get(r.tenant, 0) + 1
         widths[r.batch] = widths.get(r.batch, 0) + 1
         infeasible += int(r.infeasible)
+        solves += int(r.is_solve)
     return {
         "requests": len(trace),
         "span_s": trace[-1].t - trace[0].t,
@@ -212,4 +244,5 @@ def describe_trace(trace: Sequence[ServeRequest]) -> dict:
         "tenants": tenants,
         "widths": widths,
         "infeasible": infeasible,
+        "solves": solves,
     }

@@ -1,0 +1,185 @@
+"""Shared solver-test helpers + subprocess body for the mesh parity grid.
+
+Two roles:
+
+  * **Imported** by tests/test_solver.py: seeded matrix generators with
+    controlled spectral radius (so convergence regressions pin *exact*
+    iteration counts), the SPD 1D Laplacian, a small PageRank graph, and
+    host-side reference loops for the linear combines.
+  * **Run as a script** (4 forced fake devices must be set before jax
+    initializes): the multi-device parity grid — ``iterate(steps=k)`` must
+    be *bit-identical* to k host-side ``exe(x)`` calls for linear combines
+    across formats x impls x {1d, 2d}, because both paths execute the same
+    jitted SpMV + element-wise update; only the host round-trip differs.
+    Prints ``SOLVER parity <fmt>.<part>.<impl>: OK`` sentinel lines that
+    tests/test_solver.py asserts on.
+"""
+import os
+
+if __name__ == "__main__":
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+
+import numpy as np
+
+# ---------------------------------------------------------------- generators
+
+
+def random_square(n: int, density: float, seed: int,
+                  spectral_radius: float = None) -> np.ndarray:
+    """Seeded random square float32 matrix; ``spectral_radius`` rescales so
+    iteration x' = A x contracts/expands at a known rate (keeps k-step
+    parity values finite and makes convergence counts machine-independent).
+    """
+    rng = np.random.default_rng(seed)
+    a = ((rng.random((n, n)) < density)
+         * rng.standard_normal((n, n))).astype(np.float32)
+    if spectral_radius is not None:
+        rho = float(np.max(np.abs(np.linalg.eigvals(a.astype(np.float64)))))
+        if rho > 0:
+            a = (a * (spectral_radius / rho)).astype(np.float32)
+    return a
+
+
+def spd_laplacian(n: int, diag: float = 4.0) -> np.ndarray:
+    """The SPD 1D Laplacian (diag, -1, -1) — the CG convergence fixture."""
+    return (diag * np.eye(n) - np.eye(n, k=1) - np.eye(n, k=-1)).astype(
+        np.float32)
+
+
+def pagerank_matrix(n: int = 32, seed: int = 5,
+                    damping: float = 0.85) -> np.ndarray:
+    """A dense Google matrix G = d M + (1-d)/n over a random seeded digraph
+    (column-stochastic: power iteration converges to the PageRank vector).
+    """
+    rng = np.random.default_rng(seed)
+    adj = (rng.random((n, n)) < 0.2).astype(np.float64)
+    np.fill_diagonal(adj, 0.0)
+    out = adj.sum(axis=0)
+    m = np.where(out > 0, adj / np.maximum(out, 1.0), 1.0 / n)
+    return (damping * m + (1.0 - damping) / n).astype(np.float32)
+
+
+# ---------------------------------------------------------- host references
+
+
+def host_loop(apply_fn, x0: np.ndarray, steps: int, combine: str = "plain",
+              b: np.ndarray = None, diag: np.ndarray = None,
+              omega: float = 1.0) -> np.ndarray:
+    """k host round-trip steps of a linear combine — the loop ``iterate``
+    replaces; float32 throughout so linear combines compare bit-identical.
+    """
+    x = np.asarray(x0, np.float32)
+    for _ in range(steps):
+        y = np.asarray(apply_fn(x), np.float32)
+        if combine == "plain":
+            x = y
+        elif combine == "richardson":
+            x = (x + np.float32(omega) * (b - y)).astype(np.float32)
+        elif combine == "jacobi":
+            x = (x + (b - y) / diag).astype(np.float32)
+        else:
+            raise ValueError(f"not a linear combine: {combine!r}")
+    return x
+
+
+def np_power(a: np.ndarray, x0: np.ndarray, steps: int) -> np.ndarray:
+    """float64 power iteration — the convergence (not bit-parity) oracle."""
+    x = np.asarray(x0, np.float64)
+    for _ in range(steps):
+        y = a.astype(np.float64) @ x
+        x = y / max(np.linalg.norm(y), 1e-30)
+    return x
+
+
+def np_cg(a: np.ndarray, b: np.ndarray, x0: np.ndarray, tol: float,
+          max_steps: int = 200):
+    """Reference conjugate gradient in float64; returns (x, iterations)."""
+    a64, b64 = a.astype(np.float64), b.astype(np.float64)
+    x = np.asarray(x0, np.float64)
+    r = b64 - a64 @ x
+    p, rs = r.copy(), float(r @ r)
+    for k in range(max_steps):
+        if np.sqrt(rs) <= tol:
+            return x, k
+        ap = a64 @ p
+        alpha = rs / float(p @ ap)
+        x = x + alpha * p
+        r = r - alpha * ap
+        rs_new = float(r @ r)
+        p = r + (rs_new / rs) * p
+        rs = rs_new
+    return x, max_steps
+
+
+# -------------------------------------------------- subprocess parity grid
+
+
+def main():
+    import jax
+
+    from repro.api import SparseMatrix
+
+    print(f"DEVICES {jax.device_count()}")
+    if jax.device_count() < 4:
+        print("SOLVER SKIP")
+        return
+    n, k = 64, 5
+    # spectral radius 1.2: k plain steps grow ~1.2^k, well inside float32
+    a = random_square(n, 0.15, seed=3, spectral_radius=1.2)
+    rng = np.random.default_rng(0)
+    x0 = rng.standard_normal(n).astype(np.float32)
+    b = rng.standard_normal(n).astype(np.float32)
+    sm = SparseMatrix.from_dense(a)
+    for fmt in ("coo", "csr", "bcsr"):
+        for part in ("1d", "2d"):
+            for impl in ("xla", "pallas"):
+                exe = sm.plan(scheme=part, fmt=fmt, impl=impl,
+                              devices=jax.devices()).compile()
+                xh = host_loop(lambda v: exe(v), x0, k, "plain")
+                res = exe.iterate(x0, steps=k, combine="plain")
+                ok = (np.array_equal(np.asarray(res.x), xh)
+                      and res.steps == k)
+                print(f"SOLVER parity {fmt}.{part}.{impl}: "
+                      f"{'OK' if ok else 'FAIL'}")
+    # the other linear combines, one mesh cell each (richardson needs b,
+    # jacobi needs b + a zero-free diagonal).  Richardson runs on dyadic
+    # values (integer matrix, omega a power of two): its x + omega*r is the
+    # one combine XLA may contract into an FMA, and bit-parity with the
+    # twice-rounding host loop only holds when no rounding happens at all.
+    rngi = np.random.default_rng(7)
+    ai = ((rngi.random((n, n)) < 0.12) * rngi.integers(-2, 3, (n, n))
+          + 4 * np.eye(n)).astype(np.float32)
+    bi = rngi.integers(-3, 4, n).astype(np.float32)
+    x0i = rngi.integers(-3, 4, n).astype(np.float32)
+    exei = SparseMatrix.from_dense(ai).plan(
+        scheme="1d", fmt="coo", impl="xla", devices=jax.devices()).compile()
+    xh = host_loop(lambda v: exei(v), x0i, k, "richardson", b=bi, omega=0.25)
+    res = exei.iterate(x0i, steps=k, combine="richardson", b=bi, omega=0.25)
+    print(f"SOLVER parity richardson.1d: "
+          f"{'OK' if np.array_equal(np.asarray(res.x), xh) else 'FAIL'}")
+    aj = a + 5.0 * np.eye(n, dtype=np.float32)  # diagonally loaded
+    smj = SparseMatrix.from_dense(aj)
+    exej = smj.plan(scheme="2d", fmt="csr", impl="xla",
+                    devices=jax.devices()).compile()
+    dj = np.diag(aj).astype(np.float32)
+    xh = host_loop(lambda v: exej(v), x0, k, "jacobi", b=b, diag=dj)
+    res = exej.iterate(x0, steps=k, combine="jacobi", b=b, diag=dj)
+    print(f"SOLVER parity jacobi.2d: "
+          f"{'OK' if np.array_equal(np.asarray(res.x), xh) else 'FAIL'}")
+    # tol mode on the mesh: power iteration to tolerance, residual checked
+    # in fori chunks — must converge and report a finite residual
+    g = pagerank_matrix(n)
+    smg = SparseMatrix.from_dense(g)
+    exeg = smg.plan(scheme="1d", fmt="coo", impl="xla",
+                    devices=jax.devices()).compile()
+    res = exeg.iterate(np.full(n, 1.0 / n, np.float32), tol=1e-6,
+                       combine="power", max_steps=200, check_every=8)
+    ref = np_power(g, np.full(n, 1.0 / n), 100)
+    ok = (res.converged and res.residual <= 1e-6
+          and np.allclose(np.asarray(res.x, np.float64), ref, atol=1e-4))
+    print(f"SOLVER tol mesh: {'OK' if ok else 'FAIL'}")
+    print("SOLVER DONE")
+
+
+if __name__ == "__main__":
+    main()

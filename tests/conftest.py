@@ -1,0 +1,21 @@
+"""Shared test configuration.
+
+Registers a deterministic hypothesis profile when hypothesis is installed
+(tests importorskip it individually, so this must degrade to a no-op):
+
+  * ``deadline=None`` — a property's first example may pay a JIT compile;
+    wall-clock deadlines would flake on exactly the heaviest, most
+    valuable examples.
+  * ``derandomize=True`` — CI failures reproduce locally from the same
+    example sequence, and re-runs of an unchanged tree stay green instead
+    of probabilistically discovering new counterexamples post-merge.
+"""
+try:
+    from hypothesis import settings
+
+    settings.register_profile(
+        "repro-ci", deadline=None, derandomize=True, print_blob=True
+    )
+    settings.load_profile("repro-ci")
+except ImportError:  # requirements-dev.txt optional: property tests skip
+    pass

@@ -1,0 +1,580 @@
+"""Iterative-solver tier — api ``iterate``, engine/serve ``solve``, replay.
+
+Layers, mirroring the feature:
+
+  * single-device parity (property-based via hypothesis where installed):
+    ``iterate(steps=k)`` bit-identical to k host ``exe(x)`` calls for the
+    linear combines — on arbitrary floats for ``plain`` (no combine
+    arithmetic), on dyadic values for richardson/jacobi (XLA may contract
+    their update into an FMA; bit-parity with the twice-rounding host loop
+    is only a theorem when no rounding happens at all);
+  * convergence regressions with **pinned iteration counts** (seeded
+    fixtures + integer-exact residual thresholds make the counts
+    machine-independent): CG on the SPD Laplacian, PageRank to tolerance;
+  * failure paths: tol never reached, evicted plans, argument validation;
+  * the per-solve vs per-multiply Telemetry split and the MicroBatcher's
+    deadline-aware flush (direct unit tests — the accounting the serving
+    estimators lean on);
+  * the asyncio serve surface (one admission per session, deadline
+    shedding against the per-iteration EWMA) and solver sessions flowing
+    through workload/replay;
+  * the multi-device parity grid in a hermetic subprocess
+    (tests/_solver_runner.py, 4 forced fake devices);
+  * cluster: a worker dying mid-session rejects that session (never a
+    silent restart) while failover re-homes the matrix for later traffic.
+"""
+import asyncio
+import os
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+import _solver_runner as sr
+from repro.api import COMBINES, IterateResult, SparseMatrix
+from repro.engine import MicroBatcher, SpmvEngine
+from repro.engine.telemetry import RequestRecord, Telemetry
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run(coro):
+    return asyncio.run(coro)
+
+
+# ----------------------------------------------------- single-device parity
+
+
+def _exe(a, **plan_kw):
+    return SparseMatrix.from_dense(a).plan(**plan_kw).compile()
+
+
+@pytest.mark.parametrize("fmt", ["coo", "csr", "bcoo", "bcsr"])
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_iterate_plain_bit_identical(fmt, impl):
+    a = sr.random_square(48, 0.15, seed=11, spectral_radius=1.2)
+    exe = _exe(a, fmt=fmt, impl=impl)
+    x0 = np.random.default_rng(1).standard_normal(48).astype(np.float32)
+    xh = sr.host_loop(lambda v: exe(v), x0, 5, "plain")
+    res = exe.iterate(x0, steps=5, combine="plain")
+    assert isinstance(res, IterateResult)
+    assert res.steps == 5 and np.array_equal(np.asarray(res.x), xh)
+
+
+def test_iterate_property_parity_random_matrices():
+    """Property sweep: random seeds/sizes/steps, plain combine bit-exact."""
+    hypothesis = pytest.importorskip(
+        "hypothesis",
+        reason="property tests need hypothesis (requirements-dev.txt)",
+    )
+    given = hypothesis.given
+    settings = hypothesis.settings
+    st = hypothesis.strategies
+
+    a_big = sr.random_square(56, 0.2, seed=0, spectral_radius=1.1)
+    exe = _exe(a_big, fmt="coo")  # one compile; seeds vary the data flow
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 10_000), k=st.integers(1, 7))
+    def prop(seed, k):
+        x0 = np.random.default_rng(seed).standard_normal(56).astype(
+            np.float32)
+        xh = sr.host_loop(lambda v: exe(v), x0, k, "plain")
+        res = exe.iterate(x0, steps=k, combine="plain")
+        assert res.steps == k
+        assert np.array_equal(np.asarray(res.x), xh)
+
+    prop()
+
+
+def test_iterate_linear_combines_bit_identical_dyadic():
+    """Richardson/jacobi on dyadic values: every intermediate is exactly
+    representable, so device FMA and host two-step rounding coincide."""
+    hypothesis = pytest.importorskip(
+        "hypothesis",
+        reason="property tests need hypothesis (requirements-dev.txt)",
+    )
+    given = hypothesis.given
+    settings = hypothesis.settings
+    st = hypothesis.strategies
+
+    rng = np.random.default_rng(7)
+    a = ((rng.random((48, 48)) < 0.12) * rng.integers(-2, 3, (48, 48))
+         + 4 * np.eye(48)).astype(np.float32)
+    exe = _exe(a, fmt="csr")
+    diag = np.diag(a).astype(np.float32)
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 10_000), k=st.integers(1, 6),
+           combine=st.sampled_from(["richardson", "jacobi"]))
+    def prop(seed, k, combine):
+        r = np.random.default_rng(seed)
+        x0 = r.integers(-3, 4, 48).astype(np.float32)
+        b = r.integers(-3, 4, 48).astype(np.float32)
+        kw = dict(b=b, omega=0.25) if combine == "richardson" else \
+            dict(b=b, diag=diag)
+        xh = sr.host_loop(lambda v: exe(v), x0, k, combine, **kw)
+        res = exe.iterate(x0, steps=k, combine=combine, **kw)
+        assert np.array_equal(np.asarray(res.x), xh)
+
+    prop()
+
+
+def test_iterate_callable_combine_escape_hatch():
+    a = sr.random_square(32, 0.2, seed=2, spectral_radius=1.0)
+    exe = _exe(a, fmt="coo")
+    x0 = np.random.default_rng(3).standard_normal(32).astype(np.float32)
+    res = exe.iterate(x0, steps=4, combine=lambda x, y: 0.5 * (x + y))
+    x = x0
+    for _ in range(4):
+        y = np.asarray(exe(x), np.float32)
+        x = (np.float32(0.5) * (x + y)).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(res.x), x, rtol=1e-6, atol=1e-6)
+
+
+def test_iterate_f64_when_supported():
+    """f64 containers iterate bit-identically too — or the plan layer
+    refuses them cleanly (x64 off is the JAX default; never silent."""
+    a = sr.random_square(32, 0.2, seed=4, spectral_radius=1.1).astype(
+        np.float64)
+    try:
+        exe = _exe(a, fmt="coo")
+        x0 = np.random.default_rng(5).standard_normal(32)
+        res = exe.iterate(x0.astype(a.dtype), steps=3, combine="plain")
+    except (TypeError, ValueError) as e:
+        pytest.skip(f"float64 containers unsupported here: {e}")
+    x = x0.astype(np.asarray(exe(x0.astype(a.dtype))).dtype)
+    for _ in range(3):
+        x = np.asarray(exe(x))
+    assert np.array_equal(np.asarray(res.x), x)
+
+
+# --------------------------------------------------- convergence regressions
+
+
+def test_cg_laplacian_pinned_iteration_count():
+    """CG on the SPD 1D Laplacian: count matches the float64 reference CG
+    exactly — and is pinned, so a solver change that costs iterations (a
+    wrong beta, a stale residual) fails loudly."""
+    n = 64
+    a = sr.spd_laplacian(n)
+    rng = np.random.default_rng(1)
+    b = rng.integers(-2, 3, n).astype(np.float32)
+    exe = _exe(a, fmt="csr")
+    res = exe.iterate(np.zeros(n, np.float32), tol=1e-5, combine="cg",
+                      b=b, max_steps=200, check_every=1)
+    x_ref, iters_ref = sr.np_cg(a, b, np.zeros(n), 1e-5)
+    assert res.converged and res.residual <= 1e-5
+    assert res.steps == iters_ref == 11
+    np.testing.assert_allclose(np.asarray(res.x, np.float64), x_ref,
+                               atol=1e-4)
+
+
+def test_pagerank_power_pinned_iteration_count():
+    """Power iteration on the Google matrix of a seeded 32-node digraph:
+    converges to the PageRank vector in a pinned number of steps (rounded
+    up to the fori residual-check chunk)."""
+    g = sr.pagerank_matrix(32, seed=5)
+    exe = _exe(g, fmt="coo")
+    x0 = np.full(32, 1.0 / 32, np.float32)
+    res = exe.iterate(x0, tol=1e-6, combine="power", max_steps=100,
+                      check_every=4)
+    assert res.converged and res.residual <= 1e-6
+    assert res.steps == 12  # damping 0.85 contracts fast; chunk-aligned
+    assert res.steps % 4 == 0
+    ref = sr.np_power(g, np.full(32, 1.0 / 32), 100)
+    pr = np.asarray(res.x, np.float64)
+    np.testing.assert_allclose(pr / pr.sum(), ref / ref.sum(), atol=1e-5)
+
+
+def test_power_matches_numpy_reference_in_steps_mode():
+    a = sr.random_square(40, 0.25, seed=9, spectral_radius=2.0)
+    exe = _exe(a, fmt="coo")
+    x0 = np.random.default_rng(2).standard_normal(40).astype(np.float32)
+    res = exe.iterate(x0, steps=20, combine="power")
+    ref = sr.np_power(a, x0, 20)
+    np.testing.assert_allclose(np.asarray(res.x, np.float64), ref,
+                               atol=1e-4)
+
+
+# -------------------------------------------------------------- failure paths
+
+
+def test_tol_never_reached_stops_at_max_steps():
+    """A sign-flipping dominant eigenvalue keeps the power residual at ~2
+    forever: the loop must stop at exactly max_steps with converged=False
+    (never an infinite while_loop, never a rounded-up overshoot)."""
+    a = (-np.eye(24)).astype(np.float32)
+    exe = _exe(a, fmt="coo")
+    x0 = np.random.default_rng(0).standard_normal(24).astype(np.float32)
+    res = exe.iterate(x0, tol=1e-9, combine="power", max_steps=17,
+                      check_every=5)
+    assert not res.converged
+    assert res.steps == 17  # the fori chunks must not overshoot max_steps
+    assert res.residual > 1e-9
+
+
+def test_engine_solve_on_evicted_plan_reactivates():
+    eng = SpmvEngine(cache_capacity=1)
+    a1 = sr.random_square(32, 0.2, seed=1, spectral_radius=1.0)
+    a2 = sr.random_square(32, 0.2, seed=2, spectral_radius=1.0)
+    eng.register("one", a1)
+    eng.register("two", a2)  # evicts "one" from the plan cache
+    x0 = np.random.default_rng(3).standard_normal(32).astype(np.float32)
+    res = eng.solve("one", x0, steps=6, combine="power")
+    ref = sr.np_power(a1, x0, 6)
+    np.testing.assert_allclose(np.asarray(res.x, np.float64), ref, atol=1e-4)
+    assert eng.registry.get("one").requests >= 6  # steps, not sessions
+
+
+def test_iterate_argument_validation():
+    a = sr.spd_laplacian(16)
+    exe = _exe(a, fmt="coo")
+    x0 = np.zeros(16, np.float32)
+    with pytest.raises(ValueError):
+        exe.iterate(x0)  # neither steps nor tol
+    with pytest.raises(ValueError):
+        exe.iterate(x0, steps=3, tol=1e-6)  # both
+    with pytest.raises(ValueError):
+        exe.iterate(np.zeros((16, 2), np.float32), steps=3)
+    with pytest.raises((KeyError, ValueError)):
+        exe.iterate(x0, steps=3, combine="not-a-combine")
+    with pytest.raises(ValueError):
+        exe.iterate(x0, steps=3, combine="cg")  # cg needs b
+    with pytest.raises(ValueError):
+        exe.iterate(x0, steps=3, combine="jacobi",
+                    b=np.ones(16, np.float32))  # jacobi needs diag
+    with pytest.raises(ValueError):
+        exe.iterate(x0, steps=3, combine="jacobi",
+                    b=np.ones(16, np.float32),
+                    diag=np.zeros(16, np.float32))  # zero diagonal
+    rect = SparseMatrix.from_dense(
+        sr.random_square(16, 0.3, seed=0)[:8, :]).plan(fmt="coo").compile()
+    with pytest.raises(ValueError):
+        rect.iterate(np.zeros(16, np.float32), steps=2)  # not square
+    assert set(COMBINES) >= {"plain", "power", "richardson", "jacobi", "cg"}
+
+
+# ------------------------------------------- telemetry: solve vs multiply
+
+
+def test_telemetry_last_is_multiply_only():
+    """The accounting split the serving estimators depend on: last() never
+    returns a solve session (a 200-step total masquerading as one multiply
+    would shed every feasible request), last_solve() never a multiply."""
+    t = Telemetry()
+    mul = RequestRecord("m", 1, 0.0, 0.002, 0.0, True, False)
+    slv = RequestRecord("m", 1, 0.0, 0.8, 0.0, True, False,
+                        kind="solve", steps=200)
+    t.record(mul)
+    t.record(slv)
+    assert t.last("m") is mul
+    assert t.last_solve("m") is slv
+    assert slv.per_iter_s == pytest.approx(0.8 / 200)
+    assert mul.per_iter_s == pytest.approx(0.002)
+    bd = t.breakdown("m")
+    assert bd["requests"] == 2 and bd["solves"] == 1
+    assert bd["solve_steps"] == 200
+    t.clear()
+    assert t.last("m") is None and t.last_solve("m") is None
+
+
+def test_engine_solve_records_one_session():
+    eng = SpmvEngine(cache_capacity=4)
+    a = sr.random_square(32, 0.2, seed=6, spectral_radius=1.0)
+    eng.register("m", a)
+    x0 = np.random.default_rng(0).standard_normal(32).astype(np.float32)
+    eng.multiply("m", x0)
+    eng.solve("m", x0, steps=12, combine="power")
+    recs = [r for r in eng.telemetry.records if r.kind == "solve"]
+    assert len(recs) == 1 and recs[0].steps == 12
+    assert eng.telemetry.last("m").kind == "multiply"
+    assert eng.telemetry.last_solve("m").steps == 12
+    # first session compiled its loop: flagged as a cold-start outlier
+    assert recs[0].traced
+    eng.solve("m", x0, steps=12, combine="power")
+    assert not eng.telemetry.last_solve("m").traced
+
+
+# ------------------------------------------- MicroBatcher deadline flush
+
+
+def _small_engine():
+    eng = SpmvEngine(cache_capacity=4)
+    a = sr.random_square(24, 0.3, seed=8)
+    eng.register("m", a)
+    return eng, a
+
+
+def test_batcher_deadline_flush_fires_without_full_queue():
+    """Background mode: a sub-max_batch queue flushes when the oldest
+    request's deadline arrives — not at max_delay_s, not never."""
+    eng, a = _small_engine()
+    rng = np.random.default_rng(0)
+    xs = [rng.standard_normal(24).astype(np.float32) for _ in range(3)]
+    with MicroBatcher(eng, max_batch=8, max_delay_s=30.0) as mb:
+        t0 = time.monotonic()
+        futs = [mb.submit("m", x, deadline_s=0.05) for x in xs]
+        ys = [f.result(timeout=10.0) for f in futs]
+        elapsed = time.monotonic() - t0
+    assert elapsed < 5.0, "deadline flush waited for max_delay_s"
+    assert mb.deadline_flushes >= 1
+    assert mb.batches_run == 1  # coalesced, not flushed one by one
+    for x, y in zip(xs, ys):
+        np.testing.assert_allclose(y, a @ x, rtol=1e-4, atol=1e-4)
+
+
+def test_batcher_urgent_request_pulls_queue_forward():
+    """A later, tighter deadline must advance the whole queue's flush (the
+    early request rides in the same coalesced SpMM)."""
+    eng, a = _small_engine()
+    rng = np.random.default_rng(1)
+    x_slow = rng.standard_normal(24).astype(np.float32)
+    x_fast = rng.standard_normal(24).astype(np.float32)
+    with MicroBatcher(eng, max_batch=8, max_delay_s=30.0) as mb:
+        f_slow = mb.submit("m", x_slow, deadline_s=30.0)
+        f_fast = mb.submit("m", x_fast, deadline_s=0.05)
+        y_slow = f_slow.result(timeout=10.0)  # resolves with the urgent one
+        y_fast = f_fast.result(timeout=1.0)
+    assert mb.batches_run == 1
+    np.testing.assert_allclose(y_slow, a @ x_slow, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(y_fast, a @ x_fast, rtol=1e-4, atol=1e-4)
+
+
+def test_batcher_failed_deadline_flush_rejects_futures():
+    """A deadline flush whose engine call raises must reject the pending
+    futures — a submitted request resolves, it never hangs."""
+    eng, _ = _small_engine()
+    with MicroBatcher(eng, max_batch=8, max_delay_s=30.0) as mb:
+        fut = mb.submit("m", np.zeros(24, np.float32), deadline_s=0.05)
+        eng.unregister("m")  # flush-time multiply now fails
+        with pytest.raises(KeyError):
+            fut.result(timeout=10.0)
+
+
+def test_batcher_stop_drains_pending():
+    eng, a = _small_engine()
+    mb = MicroBatcher(eng, max_batch=8, max_delay_s=30.0, auto_flush=False)
+    x = np.ones(24, np.float32)
+    fut = mb.submit("m", x, deadline_s=30.0)
+    mb.start()
+    mb.stop(drain=True)
+    np.testing.assert_allclose(fut.result(timeout=1.0), a @ x,
+                               rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------- serve: solve()
+
+
+def _solver_service(**kwargs):
+    from repro.serve import AsyncSpmvService
+
+    svc = AsyncSpmvService(SpmvEngine(cache_capacity=8), **kwargs)
+    a = sr.random_square(48, 0.2, seed=3, spectral_radius=2.0)
+    svc.register(None, "graph", a)
+    return svc, a
+
+
+def test_service_solve_matches_reference_and_charges_once():
+    svc, a = _solver_service()
+    admits = []
+    inner = svc.admission.admit
+    svc.admission.admit = lambda *aa, **kw: (admits.append(kw), inner(*aa, **kw))[1]
+
+    async def main():
+        async with svc:
+            x0 = np.random.default_rng(0).standard_normal(48).astype(
+                np.float32)
+            res = await svc.solve("tenant-a", "graph", x0, steps=16,
+                                  combine="power")
+            ref = sr.np_power(a, x0, 16)
+            np.testing.assert_allclose(np.asarray(res.x, np.float64), ref,
+                                       atol=1e-4)
+            assert res.steps == 16
+            assert len(admits) == 1  # one session, ONE admission
+            assert admits[0]["vectors"] == 1
+            assert svc.admission.state("tenant-a").pending == 0
+
+    run(main())
+
+
+def test_service_solve_deadline_sheds_on_per_iter_ewma():
+    from repro.serve import RequestRejected
+
+    svc, _ = _solver_service()
+
+    async def main():
+        async with svc:
+            x0 = np.random.default_rng(1).standard_normal(48).astype(
+                np.float32)
+            # two sessions: the first compiles (skipped as an outlier),
+            # the second populates the per-iteration EWMA
+            await svc.solve("tenant-a", "graph", x0, steps=8,
+                            combine="power")
+            await svc.solve("tenant-a", "graph", x0, steps=8,
+                            combine="power")
+            assert svc._solve_est.get("graph", 0.0) > 0.0
+            with pytest.raises(RequestRejected) as exc:
+                await svc.solve("tenant-a", "graph", x0, steps=1_000_000,
+                                combine="power", deadline_s=1e-7)
+            assert exc.value.reason == "deadline_infeasible"
+            assert svc.admission.state("tenant-a").pending == 0
+            # feasible sessions still pass after the rejection
+            res = await svc.solve("tenant-a", "graph", x0, steps=4,
+                                  combine="power")
+            assert res.steps == 4
+
+    run(main())
+
+
+def test_service_solve_validates_x0_shape():
+    svc, _ = _solver_service()
+
+    async def main():
+        async with svc:
+            with pytest.raises(ValueError):
+                await svc.solve("tenant-a", "graph",
+                                np.zeros((48, 2), np.float32), steps=2)
+            with pytest.raises(ValueError):
+                await svc.solve("tenant-a", "graph",
+                                np.zeros(47, np.float32), steps=2)
+
+    run(main())
+
+
+# ------------------------------------------------- workload/replay: solves
+
+
+def test_workload_solver_sessions_are_deterministic():
+    from repro.serve import WorkloadSpec, generate_trace
+
+    spec = WorkloadSpec(names=("g",), n_requests=60, seed=5,
+                        solve_frac=0.4, solve_steps=8)
+    t1, t2 = generate_trace(spec), generate_trace(spec)
+    assert t1 == t2
+    solves = [r for r in t1 if r.is_solve]
+    assert 0 < len(solves) < 60
+    assert all(r.batch == 1 and r.solve_steps == 8 for r in solves)
+
+
+def test_workload_solve_frac_zero_consumes_no_randomness():
+    """The guarded draw: solve_frac=0 specs must generate traces identical
+    to specs that never heard of solver fields — the determinism the perf
+    gate's committed baselines replay against."""
+    from repro.serve import WorkloadSpec, generate_trace
+
+    base = WorkloadSpec(names=("g", "h"), n_requests=40, seed=9)
+    touched = WorkloadSpec(names=("g", "h"), n_requests=40, seed=9,
+                           solve_frac=0.0, solve_steps=99,
+                           solve_combine="cg")
+    assert generate_trace(base) == generate_trace(touched)
+    assert not any(r.is_solve for r in generate_trace(base))
+
+
+def test_replay_with_solver_sessions():
+    from repro.serve import (AsyncSpmvService, WorkloadSpec, generate_trace,
+                             replay)
+
+    eng = SpmvEngine(cache_capacity=8)
+    svc = AsyncSpmvService(eng)
+    rng = np.random.default_rng(0)
+    a = np.round(rng.standard_normal((48, 48)) * 2.0).astype(np.float32)
+    a[np.abs(a) < 1] = 0.0
+    svc.register(None, "g", a)
+    spec = WorkloadSpec(names=("g",), n_requests=24, seed=7,
+                        solve_frac=0.3, solve_steps=6, integer_values=True,
+                        rate_rps=2000.0)
+    trace = generate_trace(spec)
+    n_solves = sum(r.is_solve for r in trace)
+    assert n_solves > 0
+
+    async def main():
+        async with svc:
+            return await replay(svc, trace, time_scale=0.0)
+
+    rep = run(main())
+    assert rep.lost == 0 and rep.errors == 0
+    assert rep.solves == n_solves
+    assert rep.solves_converged == 0  # steps-mode sessions: tol N/A -> 0
+    assert rep.solve_iters["mean"] == pytest.approx(6.0)
+    assert rep.solve_latency["p50_ms"] > 0.0
+    assert rep.solve_per_iter_us > 0.0
+    # solve latencies must NOT leak into the multiply percentiles
+    assert rep.completed == len(trace)
+    d = rep.to_dict()
+    assert d["solves"] == n_solves and "solve_iters" in d
+
+
+# --------------------------------------------- multi-device parity grid
+
+
+@pytest.fixture(scope="module")
+def solver_grid_output():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tests", "_solver_runner.py")],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    if "SOLVER SKIP" in proc.stdout:
+        pytest.skip("mesh solver tests need 4 (forced) devices")
+    if proc.returncode != 0:
+        pytest.fail(f"solver runner crashed:\n{proc.stderr[-3000:]}")
+    return proc.stdout
+
+
+def test_solver_grid_all_ok(solver_grid_output):
+    assert "SOLVER DONE" in solver_grid_output
+    assert "FAIL" not in solver_grid_output
+
+
+@pytest.mark.parametrize("fmt", ["coo", "csr", "bcsr"])
+@pytest.mark.parametrize("part", ["1d", "2d"])
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_solver_mesh_parity(solver_grid_output, fmt, part, impl):
+    assert f"SOLVER parity {fmt}.{part}.{impl}: OK" in solver_grid_output
+
+
+@pytest.mark.parametrize("cell", ["richardson.1d", "jacobi.2d"])
+def test_solver_mesh_linear_combines(solver_grid_output, cell):
+    assert f"SOLVER parity {cell}: OK" in solver_grid_output
+
+
+def test_solver_mesh_tol_mode(solver_grid_output):
+    assert "SOLVER tol mesh: OK" in solver_grid_output
+
+
+# ------------------------------------------------------- cluster sessions
+
+
+def test_cluster_solve_rejected_on_worker_loss_then_rehomed():
+    """A solver session is atomic: SIGKILL its worker and the session is
+    REJECTED (WorkerLostError — never silently restarted elsewhere), while
+    failover re-homes the matrix so a knowing resubmit succeeds."""
+    from repro.cluster import ClusterRouter
+    from repro.cluster.protocol import WorkerLostError
+
+    rng = np.random.default_rng(0)
+    a = rng.integers(-2, 3, size=(24, 24)).astype(np.float32)
+    x0 = rng.integers(-2, 3, size=24).astype(np.float32)
+    ref = sr.np_power(a, x0, 6)
+    with ClusterRouter(workers=2, connect_timeout=300.0) as router:
+        router.register("g", a)
+        res = router.solve("g", x0, steps=6, combine="power")
+        assert res["steps"] == 6
+        np.testing.assert_allclose(res["x"].astype(np.float64), ref,
+                                   atol=1e-5)
+        entry = router.entries["g"]
+        victim = entry.placements[entry.rr % len(entry.placements)]
+        router.kill_worker(victim)
+        with pytest.raises(WorkerLostError):
+            router.solve("g", x0, steps=4, combine="power")
+        # failover re-homed the matrix: the resubmitted session succeeds
+        res2 = router.solve("g", x0, steps=6, combine="power")
+        np.testing.assert_allclose(res2["x"].astype(np.float64), ref,
+                                   atol=1e-5)
+        assert any(f["worker_id"] == victim for f in router.failovers)
+        assert router.entries["g"].requests >= 12  # steps-weighted routing
