@@ -38,6 +38,16 @@ A warmup replay (same matrices, different seed) runs first and is
 discarded: it pays the per-bucket trace/compile costs so the measured
 percentiles describe steady-state serving, not compilation.
 
+Every run (smoke included) also replays the **SLO-class workload**: one
+``rt`` tenant sharing the service with five ``batch`` tenants, fired as a
+burst so deep queues form, once against a class-aware service and once
+against a classless (all-``standard``) twin of the same trace.  The
+``serve.class.<name>.p99`` rows carry per-row ``gate_factor`` (queue-order
+noise), and two ``kind=count`` rows encode the SLO-class acceptance
+criteria: ``serve.class.rt.speedup_x`` (classless rt p99 over classed rt
+p99 — the run FAILS below 2.0) and ``serve.class.batch.reject_permille``
+(FAILS above the 250 budget documented in docs/slo.md).
+
 ``--smoke`` shrinks the trace for the CI perf job.  The smoke workload has
 no deadlines, so its reject-rate row is structurally 0.0 — the gate then
 fails if admission control ever starts shedding a workload it fully
@@ -68,6 +78,148 @@ def build_service():
     for name, a in mats.items():
         service.register(None, name, a)  # global: both tenants share plans
     return service, mats
+
+
+def run_classes(args, n: int, row) -> int:
+    """The SLO-class replay: classed vs classless service on one trace.
+
+    One ``rt`` tenant and five ``batch`` tenants fire the same bursty
+    single-vector trace (``time_scale=0.0`` — everything arrives at once,
+    so a deep queue forms and batch-formation *order* is what decides the
+    rt tail).  The classed service sorts claims by effective rank; the
+    classless twin serves FIFO.  Rows are medians over ``--repeats``.
+
+    Returns 0 on success; 1 if any request is lost/errored, if the rt-class
+    p99 speedup lands below 2.0, or if the batch-class reject rate exceeds
+    the 250-permille budget documented in docs/slo.md.
+    """
+    import asyncio
+
+    from repro.data.matrices import regular_matrix
+    from repro.engine import SpmvEngine
+    from repro.obs import Tracer
+    from repro.serve import (
+        TenantConfig,
+        WorkloadSpec,
+        generate_trace,
+        replay,
+        tenant_configs,
+    )
+    from repro.serve import AsyncSpmvService
+
+    bulk = tuple(f"bulk-{i}" for i in range(5))
+    # floor of 192: the classless rt p99 tracks total drain time (grows
+    # with n) while the classed rt p99 tracks the in-progress claim (does
+    # not) — below ~4 dozen chunks the two are not separable from noise
+    n = max(192, n)
+    spec = WorkloadSpec(
+        names=("mesh",), tenants=("rt-api",) + bulk,
+        n_requests=n, seed=args.seed + 7, rate_rps=5000.0,
+        arrivals="bursty", batch_mix={1: 1.0},  # width-1 only: every request
+        # rides the priority queue, none bypasses it as a pre-formed batch
+        tenant_classes={"rt-api": "rt", **{t: "batch" for t in bulk}},
+    )
+    trace = generate_trace(spec)
+    warm = generate_trace(WorkloadSpec(
+        names=spec.names, tenants=spec.tenants,
+        n_requests=max(16, n // 4), seed=args.seed + 8,
+        batch_mix=spec.batch_mix))
+    # a heavier matrix than the SLO section's: per-chunk kernel time has to
+    # dominate request-submission overhead, or the drain keeps pace with
+    # the burst, the queue stays shallow, and claim ORDER decides nothing
+    mesh = regular_matrix(1024, 512, 12, seed=1)
+
+    def build(classed: bool) -> AsyncSpmvService:
+        # max_batch=4 keeps many claim rounds in flight: preemption decides
+        # the order chunk by chunk instead of one giant batch hiding it.
+        # workers=2 keeps a server free for late rt arrivals while a bulk
+        # claim drains, and the disabled tracer keeps submission fast —
+        # both services get the identical configuration, only the tenant
+        # classes differ.
+        tenants = (tenant_configs(spec, max_pending=4 * n) if classed
+                   else {t: TenantConfig(max_pending=4 * n)
+                         for t in spec.tenants})
+        svc = AsyncSpmvService(SpmvEngine(cache_capacity=4),
+                               tenants=tenants, max_batch=4, buckets=(1, 4),
+                               workers=2, tracer=Tracer(enabled=False))
+        svc.register(None, "mesh", mesh)
+        return svc
+
+    async def measure():
+        """Interleaved A/B replays: classed and classless alternate repeat
+        by repeat so process-level warmup (dispatch caches, allocator) hits
+        both sides equally instead of flattering whichever runs last."""
+        svc_classed, svc_classless = build(True), build(False)
+        classed, classless = [], []
+        async with svc_classed:
+            async with svc_classless:
+                for svc in (svc_classed, svc_classless):
+                    # two discarded warmups each: the seeded warm trace pays
+                    # the compile costs, one throwaway replay of the measured
+                    # trace pays first-touch dispatch (2-3x cold percentiles)
+                    await replay(svc, warm, time_scale=0.0)
+                    await replay(svc, trace, time_scale=0.0)
+                for _ in range(max(5, args.repeats)):
+                    classed.append(
+                        await replay(svc_classed, trace, time_scale=0.0))
+                    classless.append(
+                        await replay(svc_classless, trace, time_scale=0.0))
+        return classed, classless, svc_classed.stats()
+
+    classed_reports, classless_reports, classed_stats = asyncio.run(measure())
+
+    def med(reports, pick) -> float:
+        return float(np.median([pick(r) for r in reports]))
+
+    fails = []
+    for rep in classed_reports + classless_reports:
+        if rep.lost or rep.errors:
+            fails.append(f"lost={rep.lost} errors={rep.errors}")
+    final = classed_reports[-1]
+    rt_p99 = med(classed_reports, lambda r: r.per_class["rt"]["p99_ms"])
+    batch_p99 = med(classed_reports, lambda r: r.per_class["batch"]["p99_ms"])
+    # the classless twin has no classes: score its rt *tenant* instead
+    rt_p99_classless = med(classless_reports,
+                           lambda r: r.per_tenant["rt-api"]["p99_ms"])
+    speedup = rt_p99_classless / rt_p99 if rt_p99 > 0 else 0.0
+    batch_total = (final.per_class["batch"]["completed"]
+                   + final.per_class["batch"]["rejected"])
+    reject_pm = med(
+        classed_reports,
+        lambda r: 1000.0 * r.per_class["batch"]["rejected"]
+        / max(1, r.per_class["batch"]["completed"]
+              + r.per_class["batch"]["rejected"]))
+
+    print(f"# --- serve.class: SLO-class replay ({len(trace)} reqs, "
+          f"1 rt + {len(bulk)} batch tenants, median over "
+          f"{len(classed_reports)})")
+    derived = (f"completed={final.completed}/{final.requests} "
+               f"fairness_by_class={final.fairness_by_class}")
+    # queue-order noise on a 1-row class can be large: gate these loose,
+    # the hard acceptance bar is the speedup count row below
+    row("serve.class.rt.p99", rt_p99 * 1e3, derived, gate_factor=8.0)
+    row("serve.class.batch.p99", batch_p99 * 1e3, derived, gate_factor=8.0)
+    row("serve.class.rt.classless_p99", rt_p99_classless * 1e3,
+        "same trace, all-standard service", gate_factor=8.0)
+    row("serve.class.rt.speedup_x", speedup,
+        "classless rt p99 / classed rt p99; FAILS < 2.0", kind="count")
+    row("serve.class.batch.reject_permille", reject_pm,
+        f"of {batch_total} batch-class requests; budget <= 250 "
+        "(docs/slo.md)", kind="count")
+    row("serve.class.preemptions", float(classed_stats["preemptions"]),
+        "claims reordered by class rank (final service)", kind="count")
+    row("serve.class.promotions", float(classed_stats["promotions"]),
+        "starvation-guard rank promotions (final service)", kind="count")
+    if speedup < 2.0:
+        fails.append(f"rt p99 speedup {speedup:.2f}x < 2.0x "
+                     f"({rt_p99_classless:.2f} -> {rt_p99:.2f} ms)")
+    if reject_pm > 250.0:
+        fails.append(f"batch reject {reject_pm:.0f} permille > 250 budget")
+    if fails:
+        print(f"FAIL (classes): {'; '.join(sorted(set(fails)))}",
+              file=sys.stderr)
+        return 1
+    return 0
 
 
 def run_cluster(args, n: int, row, trace_path=None) -> int:
@@ -283,6 +435,8 @@ def main(argv=None) -> int:
         print(f"FAIL: lost={lost} errors={errors}", file=sys.stderr)
         return 1
 
+    classes_rc = run_classes(args, n, row)
+
     cluster_rc = 0
     if args.workers:
         # cluster mode owns --trace: the artifact becomes the merged
@@ -306,7 +460,7 @@ def main(argv=None) -> int:
             json.dump(chrome_trace(spans), fh)
         print(f"# wrote {args.trace} ({len(spans)} spans, "
               f"coverage={report.span_coverage:.3f})", file=sys.stderr)
-    return cluster_rc
+    return classes_rc or cluster_rc
 
 
 if __name__ == "__main__":

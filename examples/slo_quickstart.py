@@ -1,0 +1,102 @@
+"""SLO-classes quickstart — rt traffic preempting bulk under one burst.
+
+Two tenants share one service: ``dashboard`` is ``rt`` class, ``nightly``
+is ``batch`` class (``TenantConfig(priority=...)``; see docs/slo.md).  A
+seeded bursty workload fires both at once — everything arrives in a rush,
+a deep micro-batch queue forms, and batch-formation *order* decides who
+waits.  The per-class scorecard at the end demonstrates the SLO-class
+contract:
+
+  * the rt tail beats the batch tail — preemption sorts rt requests into
+    the first chunks of each flush while bulk work slides back,
+  * claims were actually reordered (the ``preemptions`` stat moved),
+  * zero lost requests in *either* class — priority reorders work, it
+    never drops it,
+  * the report scores fairness within each class, so rt out-completing
+    batch is not flagged as unfairness.
+
+Run it:
+    PYTHONPATH=src python examples/slo_quickstart.py
+"""
+import asyncio
+import os
+
+if "XLA_FLAGS" not in os.environ:  # default to 8 fake devices when run bare
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import numpy as np
+
+from repro.data.matrices import regular_matrix
+from repro.engine import SpmvEngine
+from repro.serve import (
+    AsyncSpmvService,
+    WorkloadSpec,
+    describe_trace,
+    generate_trace,
+    replay,
+    tenant_configs,
+)
+
+# one rt tenant vs three bulk streams of the same matrix: the bulk burst
+# is what the dashboard's latency must be protected from
+spec = WorkloadSpec(
+    names=("mesh",),
+    tenants=("dashboard", "nightly-a", "nightly-b", "nightly-c"),
+    n_requests=160,
+    seed=7,
+    rate_rps=5000.0,
+    arrivals="bursty",
+    batch_mix={1: 1.0},  # single vectors: everything rides the batcher queue
+    integer_values=True,
+    tenant_classes={
+        "dashboard": "rt",
+        "nightly-a": "batch", "nightly-b": "batch", "nightly-c": "batch",
+    },
+)
+trace = generate_trace(spec)
+print(f"workload: {describe_trace(trace)}")
+
+# tenant_configs() lifts the spec's tenant_classes into TenantConfigs;
+# max_batch=4 keeps chunks small so preemption acts chunk by chunk
+service = AsyncSpmvService(
+    SpmvEngine(cache_capacity=4),
+    tenants=tenant_configs(spec, max_pending=640),
+    max_batch=4,
+    buckets=(1, 4),
+)
+mesh = np.round(regular_matrix(1024, 512, 12, seed=1) * 2.0)
+service.register(None, "mesh", mesh)  # global: all tenants share one plan
+
+
+async def main():
+    async with service:
+        # one throwaway replay pays the compile/dispatch warmup so the
+        # scored percentiles describe steady-state serving
+        await replay(service, trace, time_scale=0.0, integer_values=True)
+        report = await replay(
+            service, trace, oracles={"mesh": mesh}, time_scale=0.0,
+            integer_values=True,
+        )
+    return report
+
+
+report = asyncio.run(main())
+print(f"\n{report.describe()}\n")
+stats = service.stats()
+
+# ---- the SLO-class contract, asserted ------------------------------------
+rt, batch = report.per_class["rt"], report.per_class["batch"]
+assert report.lost == 0, "a request was neither served nor rejected"
+assert report.errors == 0, "a backend error leaked into the replay"
+assert rt["completed"] + batch["completed"] == report.completed
+assert report.bitexact == report.verified == report.completed, \
+    "an accepted request was not bit-equal to the dense oracle"
+assert rt["p99_ms"] < batch["p99_ms"], (
+    f"rt p99 {rt['p99_ms']:.2f} ms did not beat batch p99 "
+    f"{batch['p99_ms']:.2f} ms"
+)
+assert stats["preemptions"] > 0, "no claim was ever reordered by class"
+assert set(report.fairness_by_class) == {"rt", "batch"}
+print(f"OK: rt p99 {rt['p99_ms']:.2f} ms < batch p99 {batch['p99_ms']:.2f} "
+      f"ms across {stats['preemptions']} preempted claims; zero lost in "
+      "either class")

@@ -50,6 +50,9 @@ class ClusterReport:
     latencies_s: List[float] = field(default_factory=list)
     per_worker: Dict[str, int] = field(default_factory=dict)  # replies by
     # answering worker id (placement/served balance evidence)
+    # {SLO class: {"accepted": n, "shed": n, "mismatched": n}} when the
+    # replay was driven with a tenant -> class mapping
+    per_class: Dict[str, Dict[str, int]] = field(default_factory=dict)
     failovers: int = 0  # router worker-loss events observed
 
     @property
@@ -78,9 +81,16 @@ class ClusterReport:
             "wall_s": round(self.wall_s, 4),
             "accepted_rps": round(self.accepted_rps, 2),
             "per_worker": dict(sorted(self.per_worker.items())),
+            "per_class": {c: dict(d) for c, d in
+                          sorted(self.per_class.items())},
             "failovers": self.failovers,
             "latency": self.latency(),
         }
+
+    def _class_account(self, cls: str, outcome: str) -> None:
+        d = self.per_class.setdefault(
+            cls, {"accepted": 0, "shed": 0, "mismatched": 0})
+        d[outcome] += 1
 
 
 def _oracle(mats: Dict[str, np.ndarray], req: ServeRequest,
@@ -101,6 +111,7 @@ def replay_cluster(
     integer: bool = True,
     kill_after: Optional[int] = None,
     kill_worker: Optional[str] = None,
+    classes: Optional[Dict[str, str]] = None,
 ) -> ClusterReport:
     """Drive ``trace`` through the router from ``threads`` local threads.
 
@@ -120,6 +131,11 @@ def replay_cluster(
       kill_after: SIGKILL ``kill_worker`` once this many requests have
         completed — the mid-replay chaos probe.
       kill_worker: worker id to kill (default: the routers's first).
+      classes: optional {tenant: SLO class} mapping
+        (``WorkloadSpec.tenant_classes``); each request's class is
+        forwarded on the wire and outcomes are additionally folded into
+        ``report.per_class`` — the mixed-class kill replay asserts zero
+        loss per class, not just in aggregate.
 
     Returns:
       A ClusterReport; ``lost`` is 0 and ``bit_exact`` True on a passing
@@ -151,22 +167,28 @@ def replay_cluster(
                     return
                 cursor["i"] = i + 1
             req = trace[i]
+            cls = (classes or {}).get(req.tenant, "standard")
             a = mats[req.name]
             x = request_vector(req, a.shape[1], integer=integer)
             t0 = time.perf_counter()
             try:
-                y = router.multiply(req.name, x, client_for=clients_for)
+                y = router.multiply(req.name, x, client_for=clients_for,
+                                    cls=cls)
             except WorkerLostError:
                 with lock:
                     report.shed.append(
-                        {"reason": "worker_lost", "name": req.name}
+                        {"reason": "worker_lost", "name": req.name,
+                         "cls": cls}
                     )
+                    report._class_account(cls, "shed")
                 continue
             except KeyError:
                 with lock:
                     report.shed.append(
-                        {"reason": "unknown_matrix", "name": req.name}
+                        {"reason": "unknown_matrix", "name": req.name,
+                         "cls": cls}
                     )
+                    report._class_account(cls, "shed")
                 continue
             lat = time.perf_counter() - t0
             ok = np.array_equal(y, _oracle(mats, req, x))
@@ -175,8 +197,10 @@ def replay_cluster(
                 if ok:
                     report.accepted += 1
                     report.latencies_s.append(lat)
+                    report._class_account(cls, "accepted")
                 else:
                     report.mismatched += 1
+                    report._class_account(cls, "mismatched")
                 if not killed["done"] and done["n"] >= kill_after:
                     killed["done"] = True
                     wid = kill_worker or next(iter(router.workers))
@@ -206,7 +230,8 @@ def replay_cluster(
 # ------------------------------------------------------------ generator mode
 
 
-def generator_main(shard, placement, mats, integer, conn) -> None:
+def generator_main(shard, placement, mats, integer, conn,
+                   classes=None) -> None:
     """Load-generator process body (top-level: crosses the spawn boundary).
 
     Connects directly to the workers in ``placement`` (a static
@@ -214,7 +239,8 @@ def generator_main(shard, placement, mats, integer, conn) -> None:
     path, so no failover: a worker death here sheds with reason
     ``worker_lost``), replays its trace shard as fast as the workers
     absorb it, verifies every reply against the dense oracle locally, and
-    ships one result dict back through ``conn``.
+    ships one result dict back through ``conn``.  ``classes`` optionally
+    maps tenants to SLO classes, forwarded on the wire per request.
 
     Deliberately JAX-free: the imports are protocol + numpy, so a
     generator costs milliseconds to start and its CPU time is the
@@ -231,6 +257,7 @@ def generator_main(shard, placement, mats, integer, conn) -> None:
     try:
         rr = 0
         for req in shard:
+            cls = (classes or {}).get(req.tenant, "standard")
             targets = placement.get(req.name, [])
             if not targets:
                 result["shed"].append(
@@ -247,7 +274,8 @@ def generator_main(shard, placement, mats, integer, conn) -> None:
                     clients[wid] = WorkerClient(
                         address, worker_id=wid, connect_timeout=10.0
                     )
-                reply = clients[wid].request("multiply", name=req.name, x=x)
+                reply = clients[wid].request("multiply", name=req.name, x=x,
+                                             cls=cls)
             except WorkerLostError:
                 result["shed"].append(
                     {"reason": "worker_lost", "name": req.name,
@@ -285,6 +313,7 @@ def replay_generators(
     generators: int = 2,
     integer: bool = True,
     timeout: float = 300.0,
+    classes: Optional[Dict[str, str]] = None,
 ) -> ClusterReport:
     """Blast ``trace`` at the workers from ``generators`` spawned processes.
 
@@ -292,6 +321,7 @@ def replay_generators(
     current placement snapshot and talks to worker sockets directly.  The
     router is only consulted before (snapshot) and after (failover count),
     so the measured throughput is worker-bound, not router-bound.
+    ``classes`` (tenant -> SLO class) is forwarded to every generator.
 
     Returns:
       The merged ClusterReport across generators.
@@ -307,7 +337,7 @@ def replay_generators(
         parent, child = ctx.Pipe(duplex=False)
         p = ctx.Process(
             target=generator_main,
-            args=(shard, placement, mats, integer, child),
+            args=(shard, placement, mats, integer, child, classes),
             daemon=True,
         )
         p.start()

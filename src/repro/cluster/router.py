@@ -14,6 +14,12 @@ process-cluster analogue:
     replicated to the ring successors (hot head served by many workers,
     cold tail resident once — the Zipf skew the workload generator
     produces is exactly what this pays off on).
+  * **SLO classes & solver-aware sessions**: ``multiply``/``solve`` carry
+    the caller's SLO class on the wire (workers label their spans and
+    served counters with it), and session placement weighs **in-flight
+    solver steps** per worker: a new session lands on the live placement
+    with the fewest steps still running, so one 500-step session does not
+    serialize behind another while an idle replica waits (docs/slo.md).
   * **Failover**: a :class:`~repro.cluster.protocol.WorkerLostError`
     mid-multiply removes the worker from the ring and re-registers every
     matrix it exclusively held — from the router's host-side copies — on
@@ -176,6 +182,9 @@ class ClusterRouter:
         self.replicate_check = max(1, replicate_check)
         self.routed = 0  # total vectors routed (replication denominator)
         self.failovers: List[dict] = []  # worker-loss events (append-only)
+        # solver steps dispatched but not yet completed, per worker id —
+        # the load signal session placement minimizes over
+        self._inflight_steps: Dict[str, int] = {}
         self._socket_dir = socket_dir or tempfile.mkdtemp(
             prefix="repro-cluster-"
         )
@@ -267,14 +276,17 @@ class ClusterRouter:
 
     # ------------------------------------------------------------ routing
 
-    def multiply(self, name: str, x, *, client_for=None) -> np.ndarray:
+    def multiply(self, name: str, x, *, client_for=None,
+                 cls: str = "standard") -> np.ndarray:
         """Route y = A @ x to one of ``name``'s placements.
 
         Round-robins across placements (replicated hot matrices spread
         load); a worker loss mid-request triggers failover + one retry per
         remaining worker.  ``client_for`` (worker_id -> WorkerClient) lets
         a replay thread use its own data-plane connections instead of the
-        router's shared control client.
+        router's shared control client.  ``cls`` is the caller's SLO class,
+        forwarded on the wire so the worker labels its spans and served
+        counters with it.
 
         Raises:
           KeyError: unknown ``name``.
@@ -303,7 +315,7 @@ class ClusterRouter:
             client = client_for(wid) if client_for is not None else \
                 handle.client
             try:
-                result = client.request("multiply", name=name, x=x)
+                result = client.request("multiply", name=name, x=x, cls=cls)
             except WorkerLostError as e:
                 last = e
                 self._on_worker_lost(wid)
@@ -319,8 +331,33 @@ class ClusterRouter:
             f"no live placement for {name!r}",
         ) from last
 
-    def solve(self, name: str, x0, *, client_for=None, **solve_kwargs) -> dict:
+    @staticmethod
+    def pick_session_worker(live: List[str], inflight_steps: Dict[str, int],
+                            rr: int) -> str:
+        """The placement a new solver session should land on.
+
+        Least-loaded by **in-flight solver steps** (a 500-step session is
+        500 units of queueing, not 1 request), with the round-robin cursor
+        rotating the scan order so ties spread instead of always breaking
+        toward the same worker.  Pure so it is unit-testable without a
+        live cluster.
+        """
+        if not live:
+            raise ValueError("no live placements to pick from")
+        k = rr % len(live)
+        ordered = live[k:] + live[:k]
+        return min(ordered, key=lambda w: inflight_steps.get(w, 0))
+
+    def solve(self, name: str, x0, *, client_for=None, cls: str = "standard",
+              **solve_kwargs) -> dict:
         """Route a whole solver session to one of ``name``'s placements.
+
+        Placement is **solver-aware**: among the live placements the
+        session lands on the worker with the fewest in-flight solver steps
+        (:meth:`pick_session_worker`) — the session's ``steps`` budget
+        (or ``max_steps``, default 1000, in tol mode) is charged against
+        the worker for the session's duration.  ``cls`` is the caller's
+        SLO class, forwarded on the wire.
 
         Unlike :meth:`multiply`, a session is **never retried**: its
         iteration state lives only in the worker that ran it, so a
@@ -345,6 +382,8 @@ class ClusterRouter:
             raise KeyError(f"matrix {name!r} is not registered "
                            f"(registered: {sorted(self.entries)})")
         x0 = np.asarray(x0)
+        steps_budget = int(solve_kwargs.get("steps")
+                           or solve_kwargs.get("max_steps") or 1000)
         with self._lock:
             live = [w for w in entry.placements if self._live(w)]
             if not live:
@@ -352,17 +391,25 @@ class ClusterRouter:
                 live = [w for w in entry.placements if self._live(w)]
             if not live:
                 raise WorkerLostError("?", f"no live placement for {name!r}")
-            wid = live[entry.rr % len(live)]
+            wid = self.pick_session_worker(live, self._inflight_steps,
+                                           entry.rr)
             entry.rr += 1
+            self._inflight_steps[wid] = \
+                self._inflight_steps.get(wid, 0) + steps_budget
             handle = self.workers[wid]
         client = client_for(wid) if client_for is not None else handle.client
         try:
-            result = client.request("solve", name=name, x0=x0, **solve_kwargs)
+            result = client.request("solve", name=name, x0=x0, cls=cls,
+                                    **solve_kwargs)
         except WorkerLostError:
             # Re-home for future traffic, then reject THIS session: a
             # silent retry would be a silent restart.
             self._on_worker_lost(wid)
             raise
+        finally:
+            with self._lock:
+                self._inflight_steps[wid] = max(
+                    0, self._inflight_steps.get(wid, 0) - steps_budget)
         with self._lock:
             entry.requests += int(result["steps"])
             self.routed += int(result["steps"])
@@ -468,10 +515,13 @@ class ClusterRouter:
                 }
                 for name, e in self.entries.items()
             }
+        with self._lock:
+            inflight = {w: n for w, n in self._inflight_steps.items() if n}
         return {
             "workers": workers,
             "entries": placements,
             "routed": self.routed,
+            "inflight_steps": inflight,
             "failovers": list(self.failovers),
         }
 

@@ -170,15 +170,22 @@ class _WorkerState:
         return info
 
     def multiply(self, msg) -> dict:
-        """y = A @ x through the engine, traced (load/kernel/retrieve)."""
+        """y = A @ x through the engine, traced (load/kernel/retrieve).
+
+        An optional ``cls`` field (the caller's SLO class, forwarded by
+        the router) labels the lifecycle span and the per-class served
+        counter — absent for older callers, defaulting to ``standard``.
+        """
         import numpy as np
 
         name = msg["name"]
+        cls = msg.get("cls", "standard")
         tr = self.tracer.trace(label=f"{self.config.worker_id}:{name}")
-        with tr.span("serve"):
+        with tr.span("serve", cls=cls):
             y = self.engine.multiply(name, np.asarray(msg["x"]), obs=tr)
         self.served += 1
         self.metrics.counter("cluster.worker.served").inc()
+        self.metrics.counter("cluster.worker.served", cls=cls).inc()
         return {"y": y, "worker_id": self.config.worker_id}
 
     def solve(self, msg) -> dict:
@@ -189,11 +196,14 @@ class _WorkerState:
         the router must reject (never resume) a session whose worker was
         lost mid-run.  Fields mirror ``SpmvEngine.solve``: ``name``,
         ``x0``, and optionally ``steps`` / ``tol`` / ``combine`` /
-        ``b`` / ``diag`` / ``omega`` / ``max_steps`` / ``check_every``.
+        ``b`` / ``diag`` / ``omega`` / ``max_steps`` / ``check_every``;
+        an optional ``cls`` (the session's SLO class) labels the span and
+        the per-class solved counter.
         """
         import numpy as np
 
         name = msg["name"]
+        cls = msg.get("cls", "standard")
         kwargs = {}
         for k in ("steps", "tol", "combine", "omega", "max_steps",
                   "check_every"):
@@ -203,12 +213,13 @@ class _WorkerState:
             if msg.get(k) is not None:
                 kwargs[k] = np.asarray(msg[k])
         tr = self.tracer.trace(label=f"{self.config.worker_id}:{name}:solve")
-        with tr.span("serve"):
+        with tr.span("serve", cls=cls):
             result = self.engine.solve(
                 name, np.asarray(msg["x0"]), obs=tr, **kwargs
             )
         self.served += 1
         self.metrics.counter("cluster.worker.solved").inc()
+        self.metrics.counter("cluster.worker.solved", cls=cls).inc()
         return {
             "x": np.asarray(result.x),
             "steps": int(result.steps),

@@ -18,6 +18,20 @@ is amortized.  The batcher therefore:
   * pads the batch up to the next size in ``buckets`` so the jitted program
     sees a bounded set of batch shapes (one retrace per bucket, ever).
 
+**SLO classes** (docs/slo.md): each submit carries a ``priority`` rank
+(0 = most urgent; the serving layer maps ``rt``/``standard``/``batch``
+tenants onto 0/1/2).  The per-matrix queue is a priority queue at *claim*
+time: when a flush pops a queue, the popped requests are sorted by
+``(effective rank, arrival)`` before being chunked into ``max_batch``-wide
+SpMMs, so an ``rt`` arrival preempts a forming low-priority batch — it
+rides the first chunk while the bulk work slides into later ones.  A
+**starvation guard** bounds the preemption: a queued request's effective
+rank improves by one class for every ``promote_after_s`` seconds it has
+waited, so an aged ``batch`` request eventually outranks a stream of fresh
+``rt`` arrivals.  ``pending_ahead(name, rank)`` exposes the class-aware
+queue depth (vectors at equal-or-higher priority) that the admission
+controller's queue-wait model consumes.
+
 Results are delivered through ``concurrent.futures.Future``s so callers can
 block, poll or chain.
 """
@@ -35,6 +49,10 @@ import numpy as np
 __all__ = ["MicroBatcher"]
 
 
+#: Priority rank a submit gets when none is given ("standard" traffic).
+DEFAULT_RANK = 1
+
+
 @dataclass
 class _Pending:
     x: np.ndarray
@@ -42,9 +60,36 @@ class _Pending:
     deadline: float  # monotonic time by which this request must flush
     ctx: object = None  # repro.obs Trace handle (or None / NULL_TRACE)
     t_submit: float = 0.0  # perf_counter at enqueue (queue_wait span start)
+    rank: int = DEFAULT_RANK  # SLO class rank; 0 is most urgent
+    cls: str = "standard"  # class label (metrics only; rank decides order)
+    seq: int = 0  # arrival order, the tie-break within a rank
+    t_enqueue: float = 0.0  # monotonic at enqueue (starvation-guard age)
 
 
 class MicroBatcher:
+    """Deadline-aware, priority-aware coalescing of SpMV submits into SpMM.
+
+    One instance fronts one engine.  ``submit`` enqueues per matrix;
+    flushes happen on a full queue, an explicit :meth:`flush`, or — in
+    background mode — when the earliest pending deadline arrives.  Popped
+    requests are served highest-priority-first (see the module docstring
+    for the preemption and starvation-guard rules).
+
+    Args:
+      engine: the owning :class:`SpmvEngine` (or a duck-typed stand-in
+        exposing ``registry.get`` and ``multiply``).
+      max_batch: widest SpMM chunk a flush serves at once.
+      buckets: padded batch widths the jitted program may see.
+      auto_flush: flush synchronously from ``submit`` when a queue fills
+        (the serving layer disables this and flushes from worker threads).
+      max_delay_s: default flush deadline for submits without one.
+      promote_after_s: starvation guard — a queued request's effective
+        rank improves by one class per ``promote_after_s`` seconds waited.
+      metrics: optional :class:`repro.obs.MetricsRegistry` — queue-depth
+        gauges (total and per class), batch-width histogram, preemption
+        and promotion counters land here.
+    """
+
     def __init__(
         self,
         engine,
@@ -52,31 +97,40 @@ class MicroBatcher:
         buckets: Sequence[int] = (1, 2, 4, 8),
         auto_flush: bool = True,
         max_delay_s: float = 0.002,
+        promote_after_s: float = 0.25,
         metrics=None,
     ) -> None:
         if max_batch > max(buckets):
             raise ValueError("max_batch must be <= the largest bucket")
+        if promote_after_s <= 0:
+            raise ValueError(
+                f"promote_after_s must be > 0, got {promote_after_s}")
         self.engine = engine
         self.max_batch = max_batch
         self.buckets = tuple(sorted(buckets))
         self.auto_flush = auto_flush
         self.max_delay_s = max_delay_s
+        self.promote_after_s = promote_after_s
         # optional repro.obs.MetricsRegistry: queue-depth gauge + batch-width
         # histogram land here when the serving layer provides one
         self.metrics = metrics
         self._lock = threading.Lock()
         self._cv = threading.Condition(self._lock)
         self._queues: Dict[str, List[_Pending]] = defaultdict(list)
+        self._seq = 0  # global arrival counter (FIFO tie-break within rank)
         self._thread: Optional[threading.Thread] = None
         self._stop = False
         self.batches_run = 0
         self.vectors_run = 0
         self.deadline_flushes = 0  # background flushes triggered by a deadline
+        self.preemptions = 0  # flush chunks reordered by priority
+        self.promotions = 0  # aged requests served above their nominal rank
 
     # ------------------------------------------------------------- requests
 
     def submit(self, name: str, x, deadline_s: Optional[float] = None,
-               ctx=None) -> Future:
+               ctx=None, priority: Optional[int] = None,
+               cls: str = "standard") -> Future:
         """Enqueue one SpMV; returns a Future resolving to y (rows,).
 
         ``deadline_s`` is this request's latency budget: in background mode
@@ -87,6 +141,12 @@ class MicroBatcher:
         stamps ``queue_wait`` (enqueue -> batch claimed) and ``batch_form``
         (claim -> stacked) spans on it, and the engine continues with the
         load/kernel/retrieve phases of the coalesced batch.
+
+        ``priority`` is the SLO class rank (0 = most urgent; default
+        :data:`DEFAULT_RANK`): lower ranks are served in earlier chunks
+        when the queue flushes, subject to the starvation guard.  ``cls``
+        is the matching class label, used for the per-class queue-depth
+        gauge only.
 
         A failed flush (the executor raising under the coalesced batch)
         rejects the pending futures with that exception — a submitted
@@ -103,18 +163,25 @@ class MicroBatcher:
                 f"{entry.shape[1]} cols"
             )
         budget = self.max_delay_s if deadline_s is None else deadline_s
+        rank = DEFAULT_RANK if priority is None else int(priority)
         fut: Future = Future()
+        now = time.monotonic()
         with self._cv:
+            self._seq += 1
             self._queues[name].append(_Pending(
-                x, fut, time.monotonic() + budget,
+                x, fut, now + budget,
                 ctx=ctx, t_submit=time.perf_counter(),
+                rank=rank, cls=cls, seq=self._seq, t_enqueue=now,
             ))
             depth = len(self._queues[name])
+            cls_depth = sum(1 for p in self._queues[name] if p.cls == cls)
             full = depth >= self.max_batch
             # wake the flush thread: the earliest deadline may have moved up
             self._cv.notify_all()
         if self.metrics is not None:
             self.metrics.gauge("serve.queue.depth", matrix=name).set(depth)
+            self.metrics.gauge("serve.queue.depth", matrix=name,
+                               cls=cls).set(cls_depth)
         if full and self.auto_flush:
             self.flush(name)
         return fut
@@ -124,6 +191,37 @@ class MicroBatcher:
             if name is not None:
                 return len(self._queues.get(name, ()))
             return sum(len(q) for q in self._queues.values())
+
+    def _effective_rank(self, p: _Pending, now: float) -> int:
+        """The starvation-guarded rank: one class better per
+        ``promote_after_s`` seconds this request has already waited."""
+        waited = max(0.0, now - p.t_enqueue)
+        return p.rank - int(waited / self.promote_after_s)
+
+    def pending_ahead(self, name: str, rank: int) -> int:
+        """Queued vectors a new submit at ``rank`` would wait behind.
+
+        Counts only entries whose (starvation-guarded) effective rank is
+        equal or better — lower-priority entries will be preempted behind
+        the new arrival, so they do not contribute to its expected wait.
+        This is the class-aware queue depth the admission controller's
+        ``queue_wait_infeasible`` model consumes.
+        """
+        now = time.monotonic()
+        with self._lock:
+            return sum(1 for p in self._queues.get(name, ())
+                       if self._effective_rank(p, now) <= rank)
+
+    def pending_by_class(self, name: Optional[str] = None) -> Dict[str, int]:
+        """{class label: queued vectors}, one queue or all of them."""
+        with self._lock:
+            queues = ([self._queues.get(name, ())] if name is not None
+                      else list(self._queues.values()))
+            out: Dict[str, int] = {}
+            for q in queues:
+                for p in q:
+                    out[p.cls] = out.get(p.cls, 0) + 1
+            return out
 
     # -------------------------------------------------------------- flushing
 
@@ -140,12 +238,39 @@ class MicroBatcher:
             taken = {n: self._queues.pop(n, []) for n in names}
         return self._run_taken(taken)
 
+    def _order_claimed(self, reqs: List[_Pending]) -> List[_Pending]:
+        """Priority order for one popped queue: (effective rank, arrival).
+
+        This sort IS the preemption: a late-arriving ``rt`` request rides
+        the first ``max_batch`` chunk while the bulk work it displaced
+        slides into later chunks of the same flush.  The starvation guard
+        bounds it — an aged request's effective rank has improved, so old
+        ``batch`` work eventually sorts ahead of fresh ``rt`` arrivals.
+        """
+        now = time.monotonic()
+        eff = {p.seq: self._effective_rank(p, now) for p in reqs}
+        ordered = sorted(reqs, key=lambda p: (eff[p.seq], p.seq))
+        promoted = sum(1 for p in reqs if eff[p.seq] < p.rank)
+        if promoted:
+            self.promotions += promoted
+            if self.metrics is not None:
+                self.metrics.counter("serve.promotions").inc(promoted)
+        if any(a.seq != b.seq for a, b in zip(ordered, reqs)):
+            self.preemptions += 1
+            if self.metrics is not None:
+                self.metrics.counter("serve.preemptions").inc()
+        return ordered
+
     def _run_taken(self, taken: Dict[str, List[_Pending]]) -> int:
         served = 0
         if self.metrics is not None:
-            for n in taken:  # these queues were just popped empty
+            for n, reqs in taken.items():  # these queues were just popped
                 self.metrics.gauge("serve.queue.depth", matrix=n).set(0)
+                for c in {p.cls for p in reqs}:
+                    self.metrics.gauge("serve.queue.depth", matrix=n,
+                                       cls=c).set(0)
         for n, reqs in taken.items():
+            reqs = self._order_claimed(reqs)
             while reqs:
                 chunk, reqs = reqs[: self.max_batch], reqs[self.max_batch:]
                 self._run_batch(n, chunk)

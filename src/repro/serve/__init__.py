@@ -9,7 +9,10 @@ this package is the front door that turns it into a servable system:
                        the event loop, with ``drain()``/``aclose()``
   * :mod:`admission` — per-tenant bounded pending queues, token-bucket rate
                        limits, deadline-based load shedding
-                       (``RequestRejected`` with a machine-readable reason)
+                       (``RequestRejected`` with a machine-readable reason),
+                       and SLO classes (``rt``/``standard``/``batch``) that
+                       drive priority-aware batch formation and the
+                       class-aware queue-wait model (docs/slo.md)
   * :mod:`workload`  — seeded synthetic traffic: Zipfian matrix popularity,
                        Poisson/bursty arrivals, mixed vector/batch requests
   * :mod:`replay`    — fire a trace at a service and score it: p50/p95/p99,
@@ -22,11 +25,13 @@ Quickstart: ``examples/serve_quickstart.py``; knobs + report fields:
 
 from .admission import (
     REJECT_REASONS,
+    SLO_CLASSES,
     AdmissionController,
     RequestRejected,
     TenantConfig,
     TenantState,
     TokenBucket,
+    class_rank,
 )
 from .replay import SLOReport, replay, replay_sync
 from .service import AsyncSpmvService
@@ -37,6 +42,7 @@ from .workload import (
     generate_trace,
     popularity,
     request_vector,
+    tenant_configs,
 )
 
 __all__ = [
@@ -47,12 +53,15 @@ __all__ = [
     "TokenBucket",
     "RequestRejected",
     "REJECT_REASONS",
+    "SLO_CLASSES",
+    "class_rank",
     "WorkloadSpec",
     "ServeRequest",
     "generate_trace",
     "request_vector",
     "popularity",
     "describe_trace",
+    "tenant_configs",
     "SLOReport",
     "replay",
     "replay_sync",

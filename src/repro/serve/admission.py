@@ -30,10 +30,18 @@ budgets:
     where a deadline covering one service time was admitted into a queue
     holding ten.
 
+Tenants additionally carry an **SLO class** (``TenantConfig.priority``, one
+of :data:`SLO_CLASSES`): the micro-batcher serves higher classes first and
+the queue-wait model above counts only equal-or-higher-priority vectors as
+"ahead" — a deep ``batch`` backlog no longer sheds a tight-deadline ``rt``
+request that would in fact jump the queue.  See docs/slo.md for the class
+semantics and the tuning cookbook.
+
 All decisions are O(1) and synchronous; the asyncio service calls
 :meth:`AdmissionController.admit` on the event loop thread only.  With a
 :class:`repro.obs.MetricsRegistry` attached, every shed increments a
-``serve.shed{reason=...}`` counter and token buckets export a
+``serve.shed{reason=...}`` counter (plus a class-labeled
+``serve.shed{cls=...,reason=...}`` twin) and token buckets export a
 ``serve.tokens.remaining{tenant=...}`` gauge.
 """
 
@@ -45,6 +53,8 @@ from typing import Dict, Optional
 
 __all__ = [
     "REJECT_REASONS",
+    "SLO_CLASSES",
+    "class_rank",
     "RequestRejected",
     "TokenBucket",
     "TenantConfig",
@@ -59,6 +69,32 @@ REJECT_REASONS = (
     "queue_wait_infeasible",
     "shutdown",
 )
+
+#: SLO classes, most urgent first.  A tenant's class decides batch-formation
+#: order in the MicroBatcher (rt preempts standard preempts batch, bounded
+#: by the starvation guard) and which queued vectors the class-aware
+#: queue-wait admission model counts as "ahead".
+SLO_CLASSES = ("rt", "standard", "batch")
+
+#: The class tenants get when none is configured.
+DEFAULT_CLASS = "standard"
+
+
+def class_rank(priority: str) -> int:
+    """Numeric rank of an SLO class: 0 is the most urgent (``rt``).
+
+    Lower rank is served first; the rank is what the MicroBatcher sorts on
+    and what :meth:`MicroBatcher.pending_ahead` compares against.
+
+    Raises:
+      ValueError: for a class not in :data:`SLO_CLASSES`.
+    """
+    try:
+        return SLO_CLASSES.index(priority)
+    except ValueError:
+        raise ValueError(
+            f"unknown SLO class {priority!r}; expected one of {SLO_CLASSES}"
+        ) from None
 
 
 class RequestRejected(RuntimeError):
@@ -123,11 +159,20 @@ class TenantConfig:
       rate_rps: sustained token-bucket rate in vectors/s; ``None`` disables
         rate limiting.
       burst: bucket capacity in vectors (default: ``max(1, rate_rps)``).
+      priority: the tenant's SLO class, one of :data:`SLO_CLASSES`
+        (default ``"standard"``).  ``rt`` traffic preempts batch formation
+        and sees only equal-or-higher-priority vectors in the queue-wait
+        admission model; ``batch`` traffic yields to both.  See
+        docs/slo.md.
     """
 
     max_pending: Optional[int] = 64
     rate_rps: Optional[float] = None
     burst: Optional[float] = None
+    priority: str = DEFAULT_CLASS
+
+    def __post_init__(self):
+        class_rank(self.priority)  # raise early on an unknown class
 
 
 @dataclass
@@ -224,12 +269,15 @@ class AdmissionController:
           deadline_s: the request's SLO latency budget, if any.
           estimate_s: current service-time estimate for this work (the
             service's observed EWMA); feasibility is skipped when unknown.
-          queue_depth: vectors already queued ahead of this request (the
-            batcher's queue-depth gauge).  With an estimate, expected
-            completion is modeled as ``(queue_depth + 1) * estimate_s`` and
-            a deadline below that (x safety) sheds with
-            ``queue_wait_infeasible`` — bare service feasibility alone
-            would admit into an already-doomed backlog.
+          queue_depth: vectors already queued ahead of this request.  The
+            serving layer passes the **class-aware** count
+            (:meth:`MicroBatcher.pending_ahead`): only equal-or-higher
+            priority vectors wait ahead of this tenant's class, since
+            lower classes will be preempted behind it.  With an estimate,
+            expected completion is modeled as
+            ``(queue_depth + 1) * estimate_s`` and a deadline below that
+            (x safety) sheds with ``queue_wait_infeasible`` — bare service
+            feasibility alone would admit into an already-doomed backlog.
           now: injected monotonic time (tests/replay).
 
         Returns:
@@ -280,13 +328,18 @@ class AdmissionController:
         state.rejected[reason] += 1
         if self.metrics is not None:
             self.metrics.counter("serve.shed", reason=reason).inc()
+            self.metrics.counter("serve.shed", reason=reason,
+                                 cls=state.config.priority).inc()
         raise RequestRejected(tenant, reason, detail)
 
     def reject_all(self, tenant: str, reason: str = "shutdown") -> None:
         """Count an out-of-band rejection (e.g. service closed)."""
-        self.state(tenant).rejected[reason] += 1
+        state = self.state(tenant)
+        state.rejected[reason] += 1
         if self.metrics is not None:
             self.metrics.counter("serve.shed", reason=reason).inc()
+            self.metrics.counter("serve.shed", reason=reason,
+                                 cls=state.config.priority).inc()
 
     def finished(self, tenant: str) -> None:
         """A previously admitted request resolved (success or failure)."""
@@ -301,6 +354,7 @@ class AdmissionController:
         out = {}
         for tenant, s in self._tenants.items():
             out[tenant] = {
+                "priority": s.config.priority,
                 "accepted": s.accepted,
                 "completed": s.completed,
                 "pending": s.pending,

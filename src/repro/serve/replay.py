@@ -14,7 +14,11 @@ and a correctness PR must not:
   * late-service accounting: completions past their deadline (``late``) and
     infeasible requests that were served instead of shed
     (``infeasible_served``) — both must be 0 for SLO-honest serving,
-  * per-tenant fairness (Jain's index over completed vectors),
+  * per-SLO-class scorecards (completed/rejected/reasons + p50/p95/p99 per
+    class — the rows the mixed-class smoke benchmark gates on),
+  * fairness (Jain's index over completed vectors) scored *within* each
+    class — cross-class imbalance is the scheduler honoring priorities,
+    not a tenant being starved (docs/slo.md#fairness),
   * the paper's Fig.-17 load/kernel/retrieve split, aggregated from the
     engine's :class:`~repro.engine.telemetry.Telemetry`,
   * **per-phase latency attribution** from the service's request traces
@@ -64,6 +68,35 @@ def _jain(values: Sequence[float]) -> float:
     return float(v.sum() ** 2 / (v.size * (v**2).sum()))
 
 
+def _class_fairness(tenant_vectors: Dict[str, float],
+                    classes: Dict[str, str]):
+    """Jain fairness computed *within* each SLO class.
+
+    A single cross-class Jain score misreads intentional prioritization as
+    unfairness: an ``rt`` tenant out-completing a ``batch`` tenant under
+    load is the scheduler working, not a tenant being starved.  Fairness is
+    therefore scored per class — tenants only compete with peers under the
+    same policy — and the headline number is the vector-weighted mean of
+    the per-class indices (identical to the classic Jain score when every
+    tenant shares one class).
+
+    Returns:
+      ``(fairness_by_class, overall)`` — {class: Jain index} and the
+      weighted mean (1.0 when nothing completed).
+    """
+    by_class: Dict[str, list] = {}
+    for tenant, vectors in tenant_vectors.items():
+        cls = classes.get(tenant, "standard")
+        by_class.setdefault(cls, []).append(vectors)
+    fairness_by_class = {cls: _jain(v) for cls, v in sorted(by_class.items())}
+    total = sum(sum(v) for v in by_class.values())
+    if total <= 0:
+        return fairness_by_class, 1.0
+    overall = sum(fairness_by_class[cls] * sum(v)
+                  for cls, v in by_class.items()) / total
+    return fairness_by_class, float(overall)
+
+
 @dataclass
 class SLOReport:
     """Everything the replay observed, one serving scorecard."""
@@ -79,7 +112,13 @@ class SLOReport:
     reject_reasons: Dict[str, int] = field(default_factory=dict)
     latency: dict = field(default_factory=dict)  # p50/p95/p99/mean (ms)
     per_tenant: Dict[str, dict] = field(default_factory=dict)
-    fairness: float = 1.0  # Jain's index over per-tenant completed vectors
+    # per-SLO-class scorecard: {class: completed/rejected/errors/vectors,
+    # reject reasons, and p50/p95/p99/mean latency ms} (docs/slo.md)
+    per_class: Dict[str, dict] = field(default_factory=dict)
+    # Jain index *within* each class; cross-class imbalance is policy, not
+    # unfairness (see _class_fairness)
+    fairness_by_class: Dict[str, float] = field(default_factory=dict)
+    fairness: float = 1.0  # vector-weighted mean of the per-class indices
     phases: dict = field(default_factory=dict)  # Fig.-17 load/kernel/retrieve
     # span-level attribution (from the service tracer, when enabled):
     # {phase: p50/p95/p99/mean ms + count} per lifecycle phase
@@ -119,7 +158,9 @@ class SLOReport:
             "infeasible_rejected": self.infeasible_rejected,
             "latency": dict(self.latency),
             "per_tenant": {t: dict(d) for t, d in self.per_tenant.items()},
+            "per_class": {c: dict(d) for c, d in self.per_class.items()},
             "fairness": self.fairness,
+            "fairness_by_class": dict(self.fairness_by_class),
             "phases": dict(self.phases),
             "phase_latency": {p: dict(d) for p, d in
                               self.phase_latency.items()},
@@ -150,8 +191,20 @@ class SLOReport:
             f"  deadlines: late={self.late} "
             f"infeasible served={self.infeasible_served} "
             f"shed={self.infeasible_rejected}",
-            f"  fairness (Jain over tenant vectors): {self.fairness:.3f}",
+            f"  fairness (vector-weighted within-class Jain): "
+            f"{self.fairness:.3f}",
         ]
+        if self.fairness_by_class:
+            lines.append("  fairness by class: " + " ".join(
+                f"{c}={v:.3f}" for c, v in
+                sorted(self.fairness_by_class.items())))
+        for cls in sorted(self.per_class):
+            d = self.per_class[cls]
+            lines.append(
+                f"  [{cls}] completed={d['completed']} "
+                f"rejected={d['rejected']} vectors={d['vectors']} "
+                f"p50={d['p50_ms']:.2f}ms p99={d['p99_ms']:.2f}ms"
+            )
         if self.reject_reasons:
             reasons = " ".join(f"{k}={v}" for k, v in
                                sorted(self.reject_reasons.items()) if v)
@@ -312,7 +365,7 @@ async def replay(
     def tstate(tenant: str) -> dict:
         return per_tenant.setdefault(tenant, {
             "completed": 0, "rejected": 0, "errors": 0, "vectors": 0,
-            "latencies": [],
+            "latencies": [], "reject_reasons": {},
         })
 
     async def fire(i: int, req: ServeRequest, x: np.ndarray) -> None:
@@ -331,6 +384,8 @@ async def replay(
         except RequestRejected as rej:
             resolved[i] = "rejected"
             ts["rejected"] += 1
+            ts["reject_reasons"][rej.reason] = \
+                ts["reject_reasons"].get(rej.reason, 0) + 1
             reasons[rej.reason] = reasons.get(rej.reason, 0) + 1
             if req.infeasible:
                 report.infeasible_rejected += 1
@@ -398,11 +453,40 @@ async def replay(
     report.lost = len(trace) - len(resolved)
     report.reject_reasons = reasons
     report.latency = _percentiles(latencies)
+
+    # per-SLO-class scorecard: the tenant -> class mapping comes from the
+    # service's admission configs (duck-typed services without one score as
+    # all-standard, which degrades to the classic single-class report)
+    def tenant_class(tenant: str) -> str:
+        admission = getattr(service, "admission", None)
+        if admission is None:
+            return "standard"
+        return getattr(admission.state(tenant).config, "priority", "standard")
+
+    classes = {t: tenant_class(t) for t in per_tenant}
+    per_class: Dict[str, dict] = {}
+    for tenant, ts in per_tenant.items():
+        cs = per_class.setdefault(classes[tenant], {
+            "tenants": 0, "completed": 0, "rejected": 0, "errors": 0,
+            "vectors": 0, "latencies": [], "reject_reasons": {},
+        })
+        cs["tenants"] += 1
+        for k in ("completed", "rejected", "errors", "vectors"):
+            cs[k] += ts[k]
+        cs["latencies"].extend(ts["latencies"])
+        for reason, n in ts["reject_reasons"].items():
+            cs["reject_reasons"][reason] = \
+                cs["reject_reasons"].get(reason, 0) + n
+    for cs in per_class.values():
+        cs.update(_percentiles(cs.pop("latencies")))
     for tenant, ts in per_tenant.items():
         stats = _percentiles(ts.pop("latencies"))
         ts.update(stats)
+        ts["class"] = classes[tenant]
     report.per_tenant = per_tenant
-    report.fairness = _jain([d["vectors"] for d in per_tenant.values()])
+    report.per_class = per_class
+    report.fairness_by_class, report.fairness = _class_fairness(
+        {t: d["vectors"] for t, d in per_tenant.items()}, classes)
     report.solves = len(solve_latencies)
     if solve_latencies:
         report.solve_latency = _percentiles(solve_latencies)

@@ -46,13 +46,27 @@ from repro.engine import MicroBatcher, SpmvEngine
 from repro.obs import MetricsRegistry, Tracer
 from repro.obs.tracing import clock as obs_clock
 
-from .admission import AdmissionController, RequestRejected, TenantConfig
+from .admission import (
+    AdmissionController,
+    RequestRejected,
+    TenantConfig,
+    class_rank,
+)
 
 __all__ = ["AsyncSpmvService"]
 
 
 class AsyncSpmvService:
-    """Asyncio multi-tenant SpMV serving over one :class:`SpmvEngine`."""
+    """Asyncio multi-tenant SpMV serving over one :class:`SpmvEngine`.
+
+    The service is the policy layer between callers and the engine: every
+    request is admitted first (per-tenant budgets + deadline feasibility),
+    then coalesced (single vectors through the priority-aware
+    :class:`MicroBatcher`, explicit batches onto worker threads), and
+    finally delivered back onto the event loop.  A tenant's SLO class
+    (:attr:`TenantConfig.priority`) decides its batch-formation priority
+    and its class-aware queue-wait admission depth — see docs/slo.md.
+    """
 
     def __init__(
         self,
@@ -66,6 +80,7 @@ class AsyncSpmvService:
         max_batch: int = 8,
         buckets=(1, 2, 4, 8),
         max_delay_s: float = 0.002,
+        promote_after_s: float = 0.25,
         workers: int = 2,
         tracer: Optional[Tracer] = None,
         metrics: Optional[MetricsRegistry] = None,
@@ -90,6 +105,9 @@ class AsyncSpmvService:
           max_batch/buckets/max_delay_s: MicroBatcher knobs for the default
             batcher (coalescing width, padded batch shapes, default flush
             deadline).
+          promote_after_s: the default batcher's starvation guard — a
+            queued request's effective SLO class improves by one step per
+            ``promote_after_s`` seconds waited (docs/slo.md).
           workers: thread-pool width for explicit-batch requests and
             queue-full flushes.
           tracer: request-lifecycle span sink (default: an enabled
@@ -108,7 +126,8 @@ class AsyncSpmvService:
         self.engine = engine if engine is not None else SpmvEngine()
         self.batcher = batcher if batcher is not None else MicroBatcher(
             self.engine, max_batch=max_batch, buckets=buckets,
-            auto_flush=False, max_delay_s=max_delay_s, metrics=self.metrics,
+            auto_flush=False, max_delay_s=max_delay_s,
+            promote_after_s=promote_after_s, metrics=self.metrics,
         )
         self.admission = admission if admission is not None else \
             AdmissionController(safety=safety, metrics=self.metrics)
@@ -271,9 +290,14 @@ class AsyncSpmvService:
             )
         vectors = x.shape[1] if x.ndim == 2 else 1
         estimate = self._est.get(rname)
-        # queued vectors ahead of this request (the batcher queue it would
-        # join); drives the controller's wait+service feasibility model
-        depth = self.batcher.pending(rname)
+        cls = self.admission.state(tenant).config.priority
+        rank = class_rank(cls)
+        # class-aware queue depth: only equal-or-higher-priority vectors
+        # wait ahead of this tenant's class (lower ones will be preempted
+        # behind it); drives the controller's wait+service feasibility model
+        depth = self.batcher.pending_ahead(rname, rank) \
+            if hasattr(self.batcher, "pending_ahead") \
+            else self.batcher.pending(rname)
         trace = self.tracer.trace(f"{tenant}/{name}")
         ctx = trace if trace.enabled else None
         try:
@@ -284,7 +308,7 @@ class AsyncSpmvService:
         except RequestRejected as rej:
             if ctx is not None:
                 ctx.add("admit", t_start, obs_clock(), outcome=rej.reason,
-                        queue_depth=depth)
+                        queue_depth=depth, cls=cls)
             raise
         loop = asyncio.get_running_loop()
         t0 = loop.time()
@@ -292,7 +316,7 @@ class AsyncSpmvService:
             t_admitted = obs_clock()
             if ctx is not None:
                 ctx.add("admit", t_start, t_admitted, outcome="admitted",
-                        queue_depth=depth, vectors=vectors)
+                        queue_depth=depth, vectors=vectors, cls=cls)
             if x.ndim == 2:
                 # explicit batch: the wait for a worker thread is this
                 # request's queue time
@@ -307,7 +331,7 @@ class AsyncSpmvService:
                 backend = self.batcher.submit(
                     rname, x,
                     deadline_s=self._flush_budget(deadline_s, estimate),
-                    ctx=ctx,
+                    ctx=ctx, priority=rank, cls=cls,
                 )
                 if self.batcher.pending(rname) >= self.batcher.max_batch:
                     # full queue: flush from a worker, never the event loop
@@ -328,7 +352,7 @@ class AsyncSpmvService:
                         ctx.last_end if ctx.last_end is not None else t_end,
                         t_end)
             self._observe(rname, loop.time() - t0)
-            self._record_metrics(rname, t_end - t_start)
+            self._record_metrics(rname, t_end - t_start, cls=cls)
             self.served += 1
             return y
         finally:
@@ -393,6 +417,7 @@ class AsyncSpmvService:
             int(iterate_kwargs.get("max_steps", 1000))
         per_iter = self._solve_est.get(rname)
         estimate = None if per_iter is None else per_iter * steps_budget
+        cls = self.admission.state(tenant).config.priority
         trace = self.tracer.trace(f"{tenant}/{name}:solve")
         ctx = trace if trace.enabled else None
         try:
@@ -403,14 +428,14 @@ class AsyncSpmvService:
         except RequestRejected as rej:
             if ctx is not None:
                 ctx.add("admit", t_start, obs_clock(), outcome=rej.reason,
-                        steps=steps_budget)
+                        steps=steps_budget, cls=cls)
             raise
         loop = asyncio.get_running_loop()
         try:
             t_admitted = obs_clock()
             if ctx is not None:
                 ctx.add("admit", t_start, t_admitted, outcome="admitted",
-                        steps=steps_budget)
+                        steps=steps_budget, cls=cls)
 
             def run_solve():
                 t_run = obs_clock()
@@ -437,6 +462,8 @@ class AsyncSpmvService:
                         t_end)
             self._observe_solve(rname)
             self.metrics.histogram("serve.solve.e2e_ms").observe(
+                (t_end - t_start) * 1e3)
+            self.metrics.histogram("serve.solve.e2e_ms", cls=cls).observe(
                 (t_end - t_start) * 1e3)
             self.metrics.histogram("serve.solve.per_iter_us").observe(
                 result.per_iter_s * 1e6)
@@ -499,16 +526,20 @@ class AsyncSpmvService:
                                   self.est_alpha * sample
                                   + (1.0 - self.est_alpha) * old)
 
-    def _record_metrics(self, rname: str, e2e_s: float) -> None:
+    def _record_metrics(self, rname: str, e2e_s: float,
+                        cls: str = "standard") -> None:
         """Fold one completed request into the metrics registry.
 
         Per-phase series come from the engine telemetry record of the batch
         that served this request (riders of one coalesced batch observe the
         same batch-level phase times — that once IS each rider's kernel
         time); cache hit/miss gauges mirror the engine's PlanCache stats.
+        End-to-end latency is recorded twice: the classless series and a
+        ``cls``-labeled twin (the per-class SLO scorecard).
         """
         m = self.metrics
         m.histogram("serve.latency.e2e_ms").observe(e2e_s * 1e3)
+        m.histogram("serve.latency.e2e_ms", cls=cls).observe(e2e_s * 1e3)
         rec = self.engine.telemetry.last(rname)
         if rec is not None:
             m.histogram("serve.phase.load_ms").observe(rec.load_s * 1e3)
@@ -531,7 +562,7 @@ class AsyncSpmvService:
 
     def stats(self) -> dict:
         """Service-level counters + per-tenant admission snapshot."""
-        return {
+        out = {
             "served": self.served,
             "errors": self.errors,
             "inflight": len(self._inflight),
@@ -541,3 +572,8 @@ class AsyncSpmvService:
             "tenants": self.admission.snapshot(),
             "metrics": self.metrics.snapshot(),
         }
+        if hasattr(self.batcher, "pending_by_class"):
+            out["queued_by_class"] = self.batcher.pending_by_class()
+            out["preemptions"] = self.batcher.preemptions
+            out["promotions"] = self.batcher.promotions
+        return out

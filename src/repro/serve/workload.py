@@ -33,6 +33,8 @@ from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .admission import TenantConfig, class_rank
+
 __all__ = [
     "ServeRequest",
     "WorkloadSpec",
@@ -40,6 +42,7 @@ __all__ = [
     "request_vector",
     "popularity",
     "describe_trace",
+    "tenant_configs",
 ]
 
 
@@ -91,6 +94,10 @@ class WorkloadSpec:
       solve_steps: step count stamped on each solver session.
       solve_combine: combine stamped on each solver session (``power``
         needs no right-hand side, so any registered square matrix serves).
+      tenant_classes: optional {tenant: SLO class} mapping (docs/slo.md).
+        Purely descriptive — it consumes no randomness, so adding it to an
+        existing spec keeps the generated trace bit-identical; feed it to
+        :func:`tenant_configs` to build the matching service tenants.
     """
 
     names: Tuple[str, ...]
@@ -112,8 +119,16 @@ class WorkloadSpec:
     solve_frac: float = 0.0
     solve_steps: int = 16
     solve_combine: str = "power"
+    tenant_classes: Optional[Dict[str, str]] = None
 
     def __post_init__(self):
+        if self.tenant_classes:
+            for tenant, cls in self.tenant_classes.items():
+                class_rank(cls)  # raise early on an unknown class
+                if tenant not in self.tenants:
+                    raise ValueError(
+                        f"tenant_classes names unknown tenant {tenant!r}"
+                    )
         if not self.names:
             raise ValueError("workload needs at least one matrix name")
         if not self.tenants:
@@ -215,6 +230,26 @@ def request_vector(req: ServeRequest, cols: int, dtype=np.float32,
     else:
         x = rng.standard_normal(shape)
     return x.astype(dtype)
+
+
+def tenant_configs(spec: WorkloadSpec, **config_kwargs) -> Dict[str, "TenantConfig"]:
+    """Build the service's ``tenants`` mapping from a spec's SLO classes.
+
+    Every tenant in ``spec.tenants`` gets one :class:`TenantConfig` with
+    ``priority`` taken from ``spec.tenant_classes`` (default ``standard``)
+    and any remaining budget knobs (``max_pending`` / ``rate_rps`` /
+    ``burst``) from ``config_kwargs``, applied uniformly:
+
+        service = AsyncSpmvService(engine,
+                                   tenants=tenant_configs(spec,
+                                                          max_pending=128))
+    """
+    classes = spec.tenant_classes or {}
+    return {
+        tenant: TenantConfig(priority=classes.get(tenant, "standard"),
+                             **config_kwargs)
+        for tenant in dict.fromkeys(spec.tenants)
+    }
 
 
 def popularity(spec: WorkloadSpec) -> Dict[str, float]:

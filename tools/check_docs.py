@@ -6,10 +6,16 @@ Walks README.md and docs/*.md and fails if
   * a relative markdown link ``[text](path)`` points at a file or directory
     that does not exist (anchors and absolute URLs are skipped), or
   * a backticked dotted symbol starting with ``repro.`` does not resolve to
-    an importable module / attribute chain.
+    an importable module / attribute chain, or
+  * a symbol exported via ``__all__`` from the serving-facing packages
+    (:data:`COVERED_MODULES` — ``repro.serve``, ``repro.obs``) is never
+    mentioned in any backticked span of the docs corpus: the public surface
+    must be documented somewhere a reader can find it.
 
-This keeps the documented snippets from rotting: a renamed module, a moved
-example or a deleted doc breaks the docs job, not a future reader.
+This keeps the documented snippets from rotting in both directions: a
+renamed module breaks the docs job (stale docs), and a new public symbol
+without a docs mention breaks it too (undocumented surface) — not a
+future reader.
 
     PYTHONPATH=src python tools/check_docs.py
 """
@@ -24,6 +30,9 @@ ROOT = Path(__file__).resolve().parent.parent
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 SYMBOL_RE = re.compile(r"`(repro(?:\.\w+)+)`")
+
+# packages whose entire __all__ surface must appear in the docs corpus
+COVERED_MODULES = ("repro.serve", "repro.obs")
 
 
 def check_links(md: Path) -> list[str]:
@@ -67,6 +76,32 @@ def check_symbols(md: Path) -> list[str]:
     return errors
 
 
+def check_symbol_coverage(corpus: str) -> list[str]:
+    """Every ``__all__`` symbol of :data:`COVERED_MODULES` has a docs home.
+
+    A symbol counts as documented when its bare name appears inside any
+    code span of the corpus — an inline backtick span or a fenced code
+    block both qualify; a prose mention without code formatting does not
+    (that is how dead API names linger).  Fenced blocks are cut out before
+    the inline scan so their triple backticks cannot shift the pairing of
+    the single-backtick spans around them.
+    """
+    errors = []
+    fence = re.compile(r"```.*?```", re.DOTALL)
+    blocks = fence.findall(corpus)
+    inline = re.findall(r"`[^`]+`", fence.sub("", corpus))
+    spans = "\n".join(blocks + inline)
+    for modname in COVERED_MODULES:
+        mod = importlib.import_module(modname)
+        for sym in getattr(mod, "__all__", ()):
+            if not re.search(rf"\b{re.escape(sym)}\b", spans):
+                errors.append(
+                    f"{modname}.{sym} is exported via __all__ but never "
+                    "mentioned (backticked) in README.md or docs/*.md"
+                )
+    return errors
+
+
 def main() -> int:
     docs = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
     missing = [d for d in docs if not d.exists()]
@@ -75,16 +110,25 @@ def main() -> int:
         return 1
     errors = []
     n_links = n_syms = 0
+    corpus = []
     for md in docs:
-        n_links += len(LINK_RE.findall(md.read_text()))
-        n_syms += len(set(SYMBOL_RE.findall(md.read_text())))
+        text = md.read_text()
+        corpus.append(text)
+        n_links += len(LINK_RE.findall(text))
+        n_syms += len(set(SYMBOL_RE.findall(text)))
         errors += check_links(md)
         errors += check_symbols(md)
+    errors += check_symbol_coverage("\n".join(corpus))
+    n_covered = sum(
+        len(getattr(importlib.import_module(m), "__all__", ()))
+        for m in COVERED_MODULES
+    )
     for e in errors:
         print(f"ERROR: {e}")
     print(f"checked {len(docs)} files, {n_links} links, "
-          f"{n_syms} repro.* symbols: "
-          f"{'FAIL' if errors else 'OK'}")
+          f"{n_syms} repro.* symbols, "
+          f"{n_covered} __all__ exports from {len(COVERED_MODULES)} "
+          f"packages: {'FAIL' if errors else 'OK'}")
     return 1 if errors else 0
 
 
