@@ -67,6 +67,81 @@ for spec in specs:
 """
 
 
+# The topo block prices + runs the SAME 2D plan under the model-picked and
+# the worst axis assignment on a host-simulated two-axis PIM-like topology
+# (repro.topo.FakeTopology.pim_like: a fast "bank" axis, a slow
+# through-host-DRAM "host" axis).  CPU fake devices execute the kernel but
+# not the interconnect, so each row's wall-clock is the measured kernel
+# time PLUS the cost model's deterministic simulated transfer for that
+# placement — the placement delta the row exists to track.  Runs in a
+# subprocess: the 2x2 topology needs exactly 4 forced host devices.
+_TOPO_CODE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import time
+import numpy as np, jax
+from repro.api import SparseMatrix
+from repro.data.matrices import regular_matrix
+from repro.topo import CollectiveCostModel, FakeTopology
+
+topo = FakeTopology.pim_like((2, 2), devices=jax.devices()[:4])
+model = CollectiveCostModel(topo)
+
+def wall(exe, x):
+    exe(x)  # warm the trace
+    ts = []
+    for _ in range(7):
+        t0 = time.perf_counter(); exe(x)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+ratios = []
+# tall: the partial-merge bytes dominate; wide: the x-broadcast bytes do —
+# the model must steer each matrix's heavy direction onto the fast axis
+# (they pick OPPOSITE assignments on the same topology)
+for name, (rows, cols) in (("tall", (2048, 128)), ("wide", (128, 2048))):
+    a = regular_matrix(rows, cols, 5, seed=3)
+    sm = SparseMatrix.from_dense(a)
+    x = np.random.default_rng(0).standard_normal(cols).astype(np.float32)
+    ref = sm.plan(scheme="2d.equally-sized", grid=(2, 2), topology=topo)
+    ranked = model.rank(ref.scheme, sm.shape, sm.dtype.itemsize, ref.axes)
+    picks = (("model_pick",) + ranked[0], ("worst_axis",) + ranked[-1])
+    totals = {}
+    for label, assign, price in picks:
+        plan = sm.plan(scheme="2d.equally-sized", grid=(2, 2),
+                       topology=topo, assignment=assign)
+        exe = plan.compile()
+        y = np.asarray(exe(x))
+        assert np.allclose(y, a @ x, rtol=1e-4, atol=1e-4), (name, label)
+        kern_s = wall(exe, x)
+        totals[label] = kern_s + price["total_s"]
+        base = plan.scheme_id.split("@", 1)[0]
+        print(f"topo.{name}.{base}.{label},{totals[label]*1e6:.1f},"
+              f"assign={assign.tag} sim_us={price['total_s']*1e6:.1f} "
+              f"kern_us={kern_s*1e6:.1f}")
+    assert totals["model_pick"] <= totals["worst_axis"], (name, totals)
+    ratios.append(totals["worst_axis"] / totals["model_pick"])
+assert max(ratios) >= 1.2, f"placement indistinct: {ratios}"
+print(f"# topo: model pick beats worst axis up to {max(ratios):.2f}x")
+"""
+
+
+def _topo_block():
+    """Model-picked vs worst-axis placement rows on the fake PIM topology."""
+    print("# --- topo: axis-assignment placement on FakeTopology.pim_like "
+          "(repro.topo)")
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    proc = subprocess.run([sys.executable, "-c", _TOPO_CODE], env=env,
+                          capture_output=True, text=True, timeout=1800)
+    sys.stdout.write(proc.stdout)
+    if proc.returncode != 0:
+        sys.stderr.write(proc.stderr[-2000:])
+        raise SystemExit("topo benchmark failed")
+
+
 def _distributed_block(smoke: bool = False):
     """Run the 8-device distributed api-pipeline timing in a subprocess."""
     print("# --- distributed: 1D/2D end-to-end on 8 fake devices (repro.api)")
@@ -212,6 +287,10 @@ def main() -> None:
     ap.add_argument("--tune", action="store_true",
                     help="run the repro.tune measure-and-refine loop and "
                          "write BENCH_autotune.json")
+    ap.add_argument("--topo", action="store_true",
+                    help="also run the topology-placement block (topo.* "
+                         "rows: model-picked vs worst axis assignment on "
+                         "the host-simulated PIM topology)")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write the CSV rows as machine-readable JSON "
                          "(the CI perf artifact)")
@@ -226,9 +305,13 @@ def main() -> None:
             copy = io.StringIO()
             with contextlib.redirect_stdout(_Tee(sys.stdout, copy)):
                 _smoke()
+                if args.topo:
+                    _topo_block()
             _write_json(args.json, "smoke", _parse_rows(copy.getvalue()))
         else:
             _smoke()
+            if args.topo:
+                _topo_block()
         return
 
     from . import fig9_single_core, fig11_16_1d, fig17_24_2d, fig25_29_compare
@@ -239,6 +322,8 @@ def main() -> None:
     fig11_16_1d.run_scaling(scale=args.scale)
     fig17_24_2d.run(args.scale)
     fig25_29_compare.run(args.scale)
+    if args.topo:
+        _topo_block()
     if not args.quick:
         _distributed_block()
 

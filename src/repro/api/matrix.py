@@ -271,6 +271,8 @@ class SparseMatrix:
         tuner=None,
         tune_cache=None,
         batch: Optional[int] = None,
+        topology=None,
+        assignment=None,
     ) -> ExecutionPlan:
         """Resolve scheme + placement into an inspectable ExecutionPlan.
 
@@ -302,6 +304,18 @@ class SparseMatrix:
             persist across processes; ignored when ``tuner`` is given.
           batch: ``scheme="tune"`` only — representative SpMM width B the
             candidates are measured at (part of the tuning-cache key).
+          topology: a :class:`repro.topo.DeviceTopology` describing the
+            physical axes behind the device pool.  2D grid fitting then
+            ranks factorizations by modelled collective cost, the mesh is
+            built with the contiguous-mesh device order of the cheapest
+            axis assignment, and the plan records it (``topo_assignment``,
+            ``describe()``, plan IR v2).  When neither ``mesh`` nor
+            ``devices`` is given, the topology's own device grid implies
+            the pool.  See docs/topology.md.
+          assignment: force a specific axis assignment (an
+            :class:`repro.topo.AxisAssignment` or its dict form) instead of
+            the model's pick — how ``repro.tune`` measures one candidate
+            per assignment.  Requires ``topology``.
 
         Returns:
           An inspectable :class:`~repro.api.plan.ExecutionPlan`; call
@@ -317,6 +331,15 @@ class SparseMatrix:
             raise ValueError(f"unknown impl {impl!r}: 'xla' or 'pallas'")
         if mesh is not None and devices is not None:
             raise ValueError("pass mesh= or devices=, not both")
+        if assignment is not None and topology is None:
+            raise ValueError("assignment= requires topology=")
+        if topology is not None and mesh is None and devices is None:
+            # a topology with a bound device grid implies the pool
+            devices = topology.flat_devices()
+            if devices is None:
+                raise ValueError(
+                    "topology= is abstract (no devices); pass devices= too"
+                )
         if scheme == "tune":
             # measure-and-refine: delegate to repro.tune (lazy import — the
             # tuner itself plans through this very method)
@@ -340,7 +363,7 @@ class SparseMatrix:
                 )
             return tuner.tune(
                 self, devices=devices, mesh=mesh, block=block, hw=hw,
-                interpret=interpret, batch=batch,
+                interpret=interpret, batch=batch, topology=topology,
             ).best
         distributed = mesh is not None or devices is not None
         if mesh is not None:
@@ -357,7 +380,8 @@ class SparseMatrix:
         plan = resolve_scheme(
             self.stats, self.shape, n_devices, scheme, hw=hw,
             partitioning=partitioning, fmt=fmt, merge=merge, grid=grid,
-            block=block, fit=fit,
+            block=block, fit=fit, topology=topology,
+            dtype_bytes=self.dtype.itemsize,
         )
         if mesh is not None:
             # fail fast: the fitted plan must lay out on the given mesh, or
@@ -371,24 +395,54 @@ class SparseMatrix:
                     "pass grid=/scheme= that fits the mesh, or use devices= "
                     "and let plan() build the mesh"
                 )
+        topo_assignment = None
         if mesh is None and distributed:
-            if plan.partitioning == "1d":
-                mesh = compat.make_mesh((plan.grid[0],), (AXIS_1D,),
-                                        devices=devices[: plan.grid[0]])
+            mesh_shape = ((plan.grid[0],) if plan.partitioning == "1d"
+                          else tuple(plan.grid))
+            axes = (AXIS_1D,) if plan.partitioning == "1d" else AXES_2D
+            n = int(np.prod(mesh_shape))
+            if topology is not None:
+                from repro import topo as _topo
+
+                model = _topo.CollectiveCostModel(topology)
+                chosen, price = assignment, None
+                if chosen is None:
+                    best = model.best(plan, self.shape, self.dtype.itemsize,
+                                      axes)
+                    if best is not None:
+                        chosen, price = best
+                mesh, chosen = _topo.build_mesh(
+                    topology, mesh_shape, axes, assignment=chosen,
+                    devices=devices[:n],
+                )
+                if chosen is not None:
+                    if price is None:
+                        price = model.price(plan, self.shape,
+                                            self.dtype.itemsize, chosen)
+                    topo_assignment = {
+                        **chosen.to_dict(),
+                        "topology": topology.name,
+                        "transfer": {k: float(v) for k, v in price.items()},
+                    }
             else:
-                n = plan.grid[0] * plan.grid[1]
-                mesh = compat.make_mesh(tuple(plan.grid), AXES_2D,
-                                        devices=devices[:n])
+                mesh = compat.make_mesh(mesh_shape, axes, devices=devices[:n])
         hw = hw if hw is not None else HardwareModel(chips=max(1, n_devices))
         try:
             est = estimate_time(self.stats, plan, hw,
                                 dtype_bytes=self.dtype.itemsize)
         except Exception:
             est = {}
+        if topo_assignment is not None:
+            # expose the topology-priced transfer split next to the analytic
+            # Fig.-4 numbers (describe() prints both; docs/topology.md)
+            est = dict(est)
+            est["topo_load_s"] = topo_assignment["transfer"]["load_s"]
+            est["topo_merge_s"] = topo_assignment["transfer"]["merge_s"]
         return ExecutionPlan(
             matrix=self, scheme=plan, impl=impl,
             mesh=mesh if distributed else None, dtype=self.dtype,
             block=tuple(block), interpret=interpret, hw=hw, estimate=est,
+            topo_assignment=topo_assignment,
         )
 
     def compile(self, **plan_kwargs):

@@ -49,7 +49,10 @@ FORMATS = ("coo", "csr", "bcoo", "bcsr")
 # Plan-IR format version.  Bump when the IR schema changes shape in a way an
 # older reader cannot interpret; ``plan_from_ir`` rejects unknown versions
 # instead of guessing (docs/cluster.md#ir-versioning).
-IR_VERSION = 1
+# v2 added the optional "topo" axis-assignment record (docs/topology.md);
+# v1 payloads simply carry no placement metadata and still load.
+IR_VERSION = 2
+_IR_READABLE = (1, 2)
 
 
 # ---------------------------------------------------------------------------
@@ -85,14 +88,20 @@ def _plan_from_string(spec: str, n_devices: int, fmt: Optional[str],
 
 
 def fit_plan(plan: Plan, shape: tuple, n_devices: int,
-             block: Tuple[int, int]) -> Plan:
+             block: Tuple[int, int], *, topology=None,
+             dtype_bytes: int = 4) -> Plan:
     """Adapt a paper plan to the device pool + SPMD divisibility rules.
 
     2D equally-sized requires rows % R == 0 and cols % C == 0 (and
     psum_scatter additionally (rows/R) % C == 0, else downgrade to psum);
     when no factorization of the device count fits, fall back to the 1D
     element-balanced plan, which has no divisibility constraints.  An empty
-    ``plan.grid`` means "no preference" — 2D then prefers near-square grids.
+    ``plan.grid`` means "no preference" — 2D then prefers near-square grids,
+    unless a :class:`repro.topo.DeviceTopology` is given, in which case the
+    fitting grids are ranked by the modelled collective cost of each grid's
+    *best* axis assignment (x-broadcast bytes x rows-axis cost + merge bytes
+    x cols-axis cost; see docs/topology.md) and the cheapest wins —
+    near-square only breaks ties.
     """
     n = n_devices
     rows, cols = shape
@@ -125,20 +134,36 @@ def fit_plan(plan: Plan, shape: tuple, n_devices: int,
             "ppermute", (n, 1),
             plan.reason + " [2d grid unfit for shape; 1d fallback]",
         )
-    if want_c is None:
-        R, C = min(fits, key=lambda rc: abs(rc[0] - rc[1]))
-    else:
+    def _norm_merge(r: int, c: int) -> str:
+        if scheme == "equally-sized":
+            # "global" stays honored (the paper's faithful retrieve path);
+            # anything else normalizes to the aligned in-network merges
+            valid = ("psum", "psum_scatter", "global")
+            m = plan.merge if plan.merge in valid else "psum"
+            if m == "psum_scatter" and (rows // r) % c != 0:
+                m = "psum"
+            return m
+        return "global"  # unaligned rows can only merge via the paper path
+
+    if want_c is not None:
         R, C = min(fits, key=lambda rc: abs(rc[1] - want_c))
-    if scheme == "equally-sized":
-        # "global" stays honored (the paper's faithful retrieve path);
-        # anything else normalizes to the aligned in-network merges
-        valid = ("psum", "psum_scatter", "global")
-        merge = plan.merge if plan.merge in valid else "psum"
-        if merge == "psum_scatter" and (rows // R) % C != 0:
-            merge = "psum"
+    elif topology is not None:
+        from repro.topo import CollectiveCostModel
+
+        model = CollectiveCostModel(topology)
+
+        def _cost(rc):
+            r, c = rc
+            cand = Plan("2d", scheme, fmt, _norm_merge(r, c), (r, c),
+                        plan.reason)
+            best = model.best(cand, shape, dtype_bytes, AXES_2D)
+            total = best[1]["total_s"] if best else float("inf")
+            return (total, abs(r - c), r)
+
+        R, C = min(fits, key=_cost)
     else:
-        merge = "global"  # unaligned rows can only merge via the paper path
-    return Plan("2d", scheme, fmt, merge, (R, C), plan.reason)
+        R, C = min(fits, key=lambda rc: abs(rc[0] - rc[1]))
+    return Plan("2d", scheme, fmt, _norm_merge(R, C), (R, C), plan.reason)
 
 
 def resolve_scheme(
@@ -154,8 +179,14 @@ def resolve_scheme(
     grid: Optional[tuple] = None,
     block: Tuple[int, int] = (8, 16),
     fit: bool = True,
+    topology=None,
+    dtype_bytes: int = 4,
 ) -> Plan:
-    """Turn "auto" / a scheme string / an adaptive.Plan into a fitted Plan."""
+    """Turn "auto" / a scheme string / an adaptive.Plan into a fitted Plan.
+
+    ``topology`` (a :class:`repro.topo.DeviceTopology`) makes the 2D grid
+    fitting collective-cost-aware — see :func:`fit_plan`.
+    """
     hw = hw if hw is not None else HardwareModel(chips=max(1, n_devices))
     if isinstance(scheme, Plan):
         plan = scheme
@@ -183,7 +214,8 @@ def resolve_scheme(
     if grid is not None:
         plan = replace(plan, grid=tuple(grid))
     if fit:
-        plan = fit_plan(plan, shape, n_devices, block)
+        plan = fit_plan(plan, shape, n_devices, block, topology=topology,
+                        dtype_bytes=dtype_bytes)
     return plan
 
 
@@ -209,6 +241,10 @@ class ExecutionPlan:
     ring: bool = False  # 1D ring schedule (requires bucketed part)
     ring_counts: Optional[np.ndarray] = None
     measured: dict = field(default_factory=dict)  # repro.tune measured truth
+    # topology-aware placement metadata (repro.topo; None = flat placement):
+    # {"logical": [...], "physical": [[...], ...], "topology": name,
+    #  "transfer": {"load_s", "merge_s", "total_s"}}
+    topo_assignment: Optional[dict] = None
 
     # -- inspection --------------------------------------------------------
 
@@ -234,8 +270,21 @@ class ExecutionPlan:
 
     @property
     def scheme_id(self) -> str:
-        """Stable scheme identity (part of the engine's plan-cache key)."""
-        return self.scheme.tag + (".ring" if self.ring else "")
+        """Stable scheme identity (part of the engine's plan-cache key).
+
+        Topology-placed plans carry their axis assignment as an ``@`` suffix
+        (e.g. ``...@rows=host,cols=bank``) so two placements of the same
+        scheme never collide in plan caches or tuning records.
+        """
+        sid = self.scheme.tag + (".ring" if self.ring else "")
+        if self.topo_assignment:
+            phys = self.topo_assignment.get("physical") or ()
+            logical = self.topo_assignment.get("logical") or ()
+            sid += "@" + ",".join(
+                f"{l}={'*'.join(g) if g else '-'}"
+                for l, g in zip(logical, phys)
+            )
+        return sid
 
     def describe(self) -> str:
         """Human-readable one-plan summary (scheme, impl, placement, reason,
@@ -257,6 +306,19 @@ class ExecutionPlan:
         if self.estimate:
             est = ", ".join(f"{k}={v:.2e}" for k, v in self.estimate.items())
             lines.append(f"  model estimate: {est}")
+        if self.topo_assignment:
+            ta = self.topo_assignment
+            axes = ", ".join(
+                f"{l}->{'*'.join(g) if g else '-'}"
+                for l, g in zip(ta.get("logical") or (),
+                                ta.get("physical") or ())
+            )
+            line = f"  topo: {axes} on {ta.get('topology', '?')}"
+            tr = ta.get("transfer") or {}
+            if tr:
+                line += (f" (load={tr.get('load_s', 0.0):.2e}s "
+                         f"merge={tr.get('merge_s', 0.0):.2e}s)")
+            lines.append(line)
         if self.measured:
             m = self.measured
             line = f"  measured: {m['mean_s']:.2e}s/call"
@@ -325,6 +387,7 @@ class ExecutionPlan:
             "mesh": mesh_spec,
             "estimate": {k: float(v) for k, v in self.estimate.items()},
             "measured": _jsonable(self.measured),
+            "topo": _jsonable(self.topo_assignment),
         }
 
     # -- axes / specs ------------------------------------------------------
@@ -485,7 +548,8 @@ def _jsonable(obj):
 
 
 def plan_from_ir(ir: dict, matrix, *, devices=None, mesh=None,
-                 hw: Optional[HardwareModel] = None) -> ExecutionPlan:
+                 hw: Optional[HardwareModel] = None,
+                 topology=None) -> ExecutionPlan:
     """Rehydrate an :meth:`ExecutionPlan.to_ir` record against this process.
 
     The inverse of ``to_ir``: rebuilds the fitted adaptive plan verbatim (no
@@ -502,6 +566,12 @@ def plan_from_ir(ir: dict, matrix, *, devices=None, mesh=None,
         devices).  Ignored for single-device plans.
       mesh: an existing mesh matching the recorded spec (skips building one).
       hw: optional HardwareModel to attach (cosmetic; estimates ride the IR).
+      topology: optional :class:`repro.topo.DeviceTopology` of *this*
+        process — a v2 IR carrying an axis assignment is then re-realized
+        with the recorded placement (device order follows the assignment)
+        instead of flat order.  Without it the assignment still rides along
+        as metadata (``scheme_id``/``describe()`` stay faithful) but the
+        mesh uses flat device order.
 
     Returns:
       An :class:`ExecutionPlan` whose ``scheme_id``/``describe()`` match the
@@ -512,10 +582,10 @@ def plan_from_ir(ir: dict, matrix, *, devices=None, mesh=None,
         devices for the recorded mesh shape.
     """
     version = ir.get("ir_version")
-    if version != IR_VERSION:
+    if version not in _IR_READABLE:
         raise ValueError(
             f"unknown plan-IR version {version!r} (this reader speaks "
-            f"{IR_VERSION}); re-export the plan with a matching writer"
+            f"{_IR_READABLE}); re-export the plan with a matching writer"
         )
     try:
         s = ir["scheme"]
@@ -537,6 +607,7 @@ def plan_from_ir(ir: dict, matrix, *, devices=None, mesh=None,
         raise ValueError(f"plan IR carries unknown format {plan.fmt!r}")
     if impl not in ("xla", "pallas"):
         raise ValueError(f"plan IR carries unknown impl {impl!r}")
+    topo_assignment = ir.get("topo") or None
     if mesh is None and mesh_spec is not None:
         shape = tuple(int(n) for n in mesh_spec["shape"])
         axes = tuple(str(a) for a in mesh_spec["axes"])
@@ -551,9 +622,18 @@ def plan_from_ir(ir: dict, matrix, *, devices=None, mesh=None,
                 f"plan IR needs a {shape} mesh ({n} devices); this process "
                 f"has {len(devices)} — re-fit the plan instead of rehydrating"
             )
-        from repro import compat
+        if topology is not None and topo_assignment is not None:
+            from repro.topo import build_mesh
 
-        mesh = compat.make_mesh(shape, axes, devices=devices[:n])
+            mesh, _ = build_mesh(
+                topology, shape, axes, devices=devices[:n],
+                assignment={k: topo_assignment[k]
+                            for k in ("logical", "physical")},
+            )
+        else:
+            from repro import compat
+
+            mesh = compat.make_mesh(shape, axes, devices=devices[:n])
     ring_counts = ir.get("ring_counts")
     return ExecutionPlan(
         matrix=matrix,
@@ -569,4 +649,5 @@ def plan_from_ir(ir: dict, matrix, *, devices=None, mesh=None,
         ring_counts=(None if ring_counts is None
                      else np.asarray(ring_counts, dtype=np.int64)),
         measured=dict(ir.get("measured") or {}),
+        topo_assignment=topo_assignment,
     )

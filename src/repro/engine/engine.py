@@ -55,6 +55,7 @@ class SpmvEngine:
         tune_margin: float = 0.9,
         drift_factor: Optional[float] = 2.0,
         drift_alpha: float = 0.25,
+        topology=None,
     ) -> None:
         """Create a serving engine over a device pool.
 
@@ -83,6 +84,10 @@ class SpmvEngine:
             the width it was tuned at — the serving-drift trigger.  None
             disables drift re-tuning (one refinement per entry, ever).
           drift_alpha: EWMA weight for the observed batch width.
+          topology: a :class:`repro.topo.DeviceTopology` over the pool —
+            2D grids are then fitted and placed by collective cost (mesh
+            device order follows the cheapest axis assignment; see
+            docs/topology.md) instead of flat device order.
 
         Raises:
           ValueError: for an unknown ``impl``, a ``tune_margin`` outside
@@ -103,6 +108,9 @@ class SpmvEngine:
         if not 0.0 < drift_alpha <= 1.0:
             raise ValueError(f"drift_alpha must be in (0, 1]; got {drift_alpha}")
         self.impl = impl
+        self.topology = topology
+        if devices is None and topology is not None:
+            devices = topology.flat_devices()
         self.devices = list(devices) if devices is not None else jax.devices()
         self.cache = PlanCache(cache_capacity)
         self.registry = MatrixRegistry()
@@ -145,7 +153,9 @@ class SpmvEngine:
 
     def _fit_plan(self, plan: Plan, shape: tuple, dtype) -> Plan:
         """Adapt the paper plan to the device pool (api.fit_plan rules)."""
-        return fit_plan(plan, shape, self.n_devices, self.block)
+        return fit_plan(plan, shape, self.n_devices, self.block,
+                        topology=self.topology,
+                        dtype_bytes=np.dtype(dtype).itemsize)
 
     # -------------------------------------------------------------- building
 
@@ -160,21 +170,32 @@ class SpmvEngine:
                 entry.spill = compiled.part
 
     def _build(self, sm: SparseMatrix, plan: Plan, key: PlanKey,
-               impl: str, part=None) -> CompiledPlan:
+               impl: str, part=None, assignment=None) -> CompiledPlan:
         """Run the api chain once for ``plan`` and wrap the MeshExecutor.
 
         ``part`` short-circuits host partitioning with a spilled
         PartitionedMatrix (reactivation after eviction): the build then
-        only re-places and re-traces.
+        only re-places and re-traces.  ``assignment`` pins a measured axis
+        assignment (tuned winners) instead of the cost model's pick.
         """
         t0 = time.perf_counter()
-        if plan.partitioning == "1d":
-            mesh = self._mesh((plan.grid[0],), (_AXIS_1D,))
+        if self.topology is not None:
+            # let plan() place the mesh by collective cost (device order
+            # follows the cheapest axis assignment; docs/topology.md)
+            ep = sm.plan(
+                scheme=plan, devices=self.devices, topology=self.topology,
+                impl=impl, block=self.block, hw=self.hw,
+                assignment=assignment,
+            )
         else:
-            mesh = self._mesh(tuple(plan.grid), _AXES_2D)
-        ep = sm.plan(
-            scheme=plan, mesh=mesh, impl=impl, block=self.block, hw=self.hw
-        )
+            if plan.partitioning == "1d":
+                mesh = self._mesh((plan.grid[0],), (_AXIS_1D,))
+            else:
+                mesh = self._mesh(tuple(plan.grid), _AXES_2D)
+            ep = sm.plan(
+                scheme=plan, mesh=mesh, impl=impl, block=self.block,
+                hw=self.hw,
+            )
         if part is not None:
             ep.part = part  # spilled host partition: skip re-partitioning
         else:
@@ -630,6 +651,7 @@ class SpmvEngine:
             batch=batch,
             x=x,
             baseline=(entry.plan, entry.cache_key[4]),
+            topology=self.topology,
         )
         best, incumbent = result.best_measurement, result.baseline
         event = {
@@ -646,7 +668,10 @@ class SpmvEngine:
             "swapped": False,
         }
         plan, impl = result.best.scheme, result.best.impl
-        scheme_id = plan.tag
+        # the ExecutionPlan's scheme_id carries the axis-assignment suffix,
+        # so a tuned placement of the same scheme gets its own cache slot
+        scheme_id = result.best.scheme_id
+        winner_assignment = result.best.topo_assignment
         key: PlanKey = (entry.fingerprint, tuple(plan.grid),
                         entry.dtype, scheme_id, impl)
         beats = best.mean_s < incumbent.mean_s * self.tune_margin
@@ -660,7 +685,8 @@ class SpmvEngine:
                     self._swap_entry(entry, key, plan)
                     event["swapped"] = True
             if not event["swapped"]:
-                built = self._build(entry.matrix, plan, key, impl)
+                built = self._build(entry.matrix, plan, key, impl,
+                                    assignment=winner_assignment)
                 built.executor.warmup()  # trace off the request path
                 with self._swap_lock:
                     if self.cache.peek(key) is not None:

@@ -24,6 +24,8 @@ Quickstart: ``examples/serve_quickstart.py``; knobs + report fields:
 """
 
 from .admission import (
+    CLASS_DEADLINE_DEFAULTS,
+    CLASS_RATE_WEIGHTS,
     REJECT_REASONS,
     SLO_CLASSES,
     AdmissionController,
@@ -32,6 +34,8 @@ from .admission import (
     TenantState,
     TokenBucket,
     class_rank,
+    class_rate_weight,
+    default_deadline,
 )
 from .replay import SLOReport, replay, replay_sync
 from .service import AsyncSpmvService
@@ -54,7 +58,11 @@ __all__ = [
     "RequestRejected",
     "REJECT_REASONS",
     "SLO_CLASSES",
+    "CLASS_RATE_WEIGHTS",
+    "CLASS_DEADLINE_DEFAULTS",
     "class_rank",
+    "class_rate_weight",
+    "default_deadline",
     "WorkloadSpec",
     "ServeRequest",
     "generate_trace",

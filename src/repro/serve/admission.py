@@ -54,7 +54,11 @@ from typing import Dict, Optional
 __all__ = [
     "REJECT_REASONS",
     "SLO_CLASSES",
+    "CLASS_RATE_WEIGHTS",
+    "CLASS_DEADLINE_DEFAULTS",
     "class_rank",
+    "class_rate_weight",
+    "default_deadline",
     "RequestRejected",
     "TokenBucket",
     "TenantConfig",
@@ -78,6 +82,34 @@ SLO_CLASSES = ("rt", "standard", "batch")
 
 #: The class tenants get when none is configured.
 DEFAULT_CLASS = "standard"
+
+#: Token-bucket refill multiplier per SLO class: a configured ``rate_rps``
+#: is the *standard* rate, and the tenant's class scales it — rt bursts
+#: refill twice as fast as standard, batch at half speed — so the same
+#: nominal budget buys urgency-proportional throughput instead of every
+#: class spending one shared rate (docs/slo.md#class-weighted-buckets).
+CLASS_RATE_WEIGHTS = {"rt": 2.0, "standard": 1.0, "batch": 0.5}
+
+#: Implicit deadline per SLO class, applied by the service when a request
+#: arrives with no explicit ``deadline_s``.  ``batch`` work carries a loose
+#: default so queue-wait shedding has something to compare against (an
+#: unbounded batch backlog is exactly the load the paper's retrieve phase
+#: collapses under); rt/standard stay ``None`` — interactive callers are
+#: expected to state their SLO, and an invented tight default would shed
+#: traffic the operator never asked to shed.
+CLASS_DEADLINE_DEFAULTS = {"rt": None, "standard": None, "batch": 30.0}
+
+
+def class_rate_weight(priority: str) -> float:
+    """The refill multiplier of an SLO class (see CLASS_RATE_WEIGHTS)."""
+    class_rank(priority)
+    return CLASS_RATE_WEIGHTS.get(priority, 1.0)
+
+
+def default_deadline(priority: str) -> Optional[float]:
+    """The implicit deadline of an SLO class, or None (no implicit SLO)."""
+    class_rank(priority)
+    return CLASS_DEADLINE_DEFAULTS.get(priority)
 
 
 def class_rank(priority: str) -> int:
@@ -244,7 +276,14 @@ class AdmissionController:
     def _make_bucket(config: TenantConfig) -> Optional[TokenBucket]:
         if config.rate_rps is None:
             return None
-        return TokenBucket(config.rate_rps, config.burst)
+        # class-weighted refill: the configured rate is the standard-class
+        # rate; rt refills faster, batch slower (CLASS_RATE_WEIGHTS).  The
+        # burst capacity is NOT scaled — how much a tenant may burst is a
+        # separate knob from how fast the budget replenishes.
+        rate = config.rate_rps * class_rate_weight(config.priority)
+        burst = (config.burst if config.burst is not None
+                 else max(1.0, config.rate_rps))
+        return TokenBucket(rate, burst)
 
     # ----------------------------------------------------------- decisions
 

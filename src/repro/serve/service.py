@@ -51,6 +51,7 @@ from .admission import (
     RequestRejected,
     TenantConfig,
     class_rank,
+    default_deadline,
 )
 
 __all__ = ["AsyncSpmvService"]
@@ -257,7 +258,9 @@ class AsyncSpmvService:
           deadline_s: SLO latency budget.  Drives both load shedding (the
             request is rejected up front when the budget cannot be met) and
             the batcher's flush deadline (the coalescing wait never eats
-            the whole budget).
+            the whole budget).  ``None`` falls back to the tenant class's
+            default budget (``batch`` gets a loose one; interactive
+            classes stay unbounded) — see docs/slo.md.
 
         Returns:
           Host rows (rows[, B]).
@@ -292,6 +295,11 @@ class AsyncSpmvService:
         estimate = self._est.get(rname)
         cls = self.admission.state(tenant).config.priority
         rank = class_rank(cls)
+        if deadline_s is None:
+            # class default (batch: loose, interactive: none) so queue-wait
+            # shedding has a budget to compare against even when the caller
+            # stated no SLO — see docs/slo.md
+            deadline_s = default_deadline(cls)
         # class-aware queue depth: only equal-or-higher-priority vectors
         # wait ahead of this tenant's class (lower ones will be preempted
         # behind it); drives the controller's wait+service feasibility model
@@ -389,7 +397,8 @@ class AsyncSpmvService:
             (:meth:`SpmvEngine.solve`), as are ``iterate_kwargs``
             (``b`` / ``diag`` / ``omega`` / ``max_steps`` /
             ``check_every``).
-          deadline_s: SLO budget for the *whole* session.
+          deadline_s: SLO budget for the *whole* session.  ``None`` falls
+            back to the tenant class's default budget (see docs/slo.md).
 
         Returns:
           :class:`repro.api.IterateResult`.
@@ -418,6 +427,8 @@ class AsyncSpmvService:
         per_iter = self._solve_est.get(rname)
         estimate = None if per_iter is None else per_iter * steps_budget
         cls = self.admission.state(tenant).config.priority
+        if deadline_s is None:
+            deadline_s = default_deadline(cls)
         trace = self.tracer.trace(f"{tenant}/{name}:solve")
         ctx = trace if trace.enabled else None
         try:

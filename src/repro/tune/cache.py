@@ -58,14 +58,19 @@ except ImportError:  # non-POSIX: degrade to lock-free (single-process) mode
         pass
 
 
-def topology_key(devices=None, mesh=None) -> str:
+def topology_key(devices=None, mesh=None, topology=None) -> str:
     """Stable identity of the device pool a measurement is valid for.
 
     ``platform:count`` (e.g. ``cpu:8``, ``tpu:4``) — measurements on a
-    different platform or pool size are different cache entries.
+    different platform or pool size are different cache entries.  A
+    :class:`repro.topo.DeviceTopology` appends its name and axis sizes
+    (e.g. ``cpu:4|pim2x2:2x2``): placements measured against one declared
+    interconnect say nothing about another.
     """
     if mesh is not None:
         devices = list(mesh.devices.flat)
+    elif devices is None and topology is not None and topology.devices is not None:
+        devices = topology.flat_devices()
     elif devices is None:
         import jax
 
@@ -73,7 +78,11 @@ def topology_key(devices=None, mesh=None) -> str:
     else:
         devices = list(devices)
     platforms = sorted({getattr(d, "platform", "cpu") for d in devices})
-    return f"{'+'.join(platforms)}:{len(devices)}"
+    key = f"{'+'.join(platforms)}:{len(devices)}"
+    if topology is not None:
+        sizes = "x".join(str(s) for s in topology.axis_sizes)
+        key += f"|{topology.name}:{sizes}"
+    return key
 
 
 @dataclass(frozen=True)
@@ -300,6 +309,7 @@ def make_key(
     batch: Optional[int] = None,
     impls=("xla",),
     block=(8, 16),
+    topology=None,
 ) -> TuneKey:
     """The TuneKey for tuning ``matrix`` on the given pool.
 
@@ -310,7 +320,7 @@ def make_key(
         impls = (impls,)
     return TuneKey(
         fingerprint=matrix.fingerprint(),
-        topology=topology_key(devices=devices, mesh=mesh),
+        topology=topology_key(devices=devices, mesh=mesh, topology=topology),
         dtype=np.dtype(matrix.dtype).name,
         batch=int(batch or 1),
         impls="+".join(sorted(set(impls))),

@@ -45,6 +45,7 @@ class CandidateGenerator:
         block: Tuple[int, int] = (8, 16),
         hw: Optional[HardwareModel] = None,
         interpret: bool = True,
+        topology=None,
     ) -> list:
         """Candidate ExecutionPlans for ``matrix`` on the given pool.
 
@@ -57,6 +58,12 @@ class CandidateGenerator:
           hw: HardwareModel for the analytic ranking (default: one chip per
             device in the pool).
           interpret: Pallas interpret mode (keep True off-TPU).
+          topology: a :class:`repro.topo.DeviceTopology` — each distributed
+            candidate is then expanded into one plan *per viable axis
+            assignment* (model-ranked order), so the measurements can
+            overrule the cost model's placement pick, not just its scheme
+            pick.  Assignment-expanded candidates count against
+            ``max_candidates`` like any other.
 
         Returns:
           A list of ExecutionPlans, analytic pick first, capped at
@@ -76,6 +83,15 @@ class CandidateGenerator:
             include_exotic=self.include_exotic,
         )
         out, seen = [], set()
+
+        def _admit(plan) -> None:
+            # scheme_id includes the axis-assignment suffix, so two
+            # placements of one scheme are distinct candidates
+            key = (plan.scheme_id, plan.impl, plan.grid)
+            if key not in seen:
+                seen.add(key)
+                out.append(plan)
+
         for scheme in schemes:
             for impl in self.impls:
                 if len(out) >= self.max_candidates:
@@ -89,12 +105,30 @@ class CandidateGenerator:
                         block=block,
                         hw=hw,
                         interpret=interpret,
+                        topology=topology,
                     )
                 except ValueError:
                     continue  # unfit for this pool/mesh; not a candidate
-                key = (plan.scheme_id, plan.impl, plan.grid)
-                if key in seen:
+                _admit(plan)
+                if topology is None or plan.topo_assignment is None:
                     continue
-                seen.add(key)
-                out.append(plan)
+                # expand: one candidate per alternative axis assignment of
+                # the fitted grid (model pick already admitted above)
+                from repro.topo import CollectiveCostModel
+
+                ranked = CollectiveCostModel(topology).rank(
+                    plan.scheme, matrix.shape, matrix.dtype.itemsize,
+                    plan.axes,
+                )
+                for alt, _price in ranked:
+                    if len(out) >= self.max_candidates:
+                        return out
+                    try:
+                        _admit(matrix.plan(
+                            scheme=plan.scheme, impl=impl, devices=devices,
+                            block=block, hw=hw, interpret=interpret,
+                            topology=topology, assignment=alt,
+                        ))
+                    except ValueError:
+                        continue
         return out

@@ -90,6 +90,7 @@ class Tuner:
         batch: Optional[int] = None,
         x=None,
         baseline: Optional[Tuple[Plan, str]] = None,
+        topology=None,
     ) -> TuningResult:
         """Measure candidates for ``matrix`` and return the fastest plan.
 
@@ -106,6 +107,11 @@ class Tuner:
           baseline: optional (Plan, impl) incumbent to measure alongside
             the generated candidates (the engine passes its current plan);
             default baseline is the analytic "auto" pick.
+          topology: a :class:`repro.topo.DeviceTopology` — candidates are
+            then expanded per axis assignment (measured placements can
+            overrule the cost model's pick), the topology name keys the
+            cache, and the cached winner records its assignment so
+            rebuilds reproduce the placement without re-measuring.
 
         Returns:
           A TuningResult; ``result.best.measured`` carries the measured
@@ -113,18 +119,18 @@ class Tuner:
         """
         key = make_key(
             matrix, devices=devices, mesh=mesh, batch=batch,
-            impls=self.generator.impls, block=block,
+            impls=self.generator.impls, block=block, topology=topology,
         )
         record = self.cache.get(key)
         if record is not None and self._record_covers_baseline(record, baseline):
             return self._from_record(
                 matrix, record, key,
                 devices=devices, mesh=mesh, block=block, hw=hw,
-                interpret=interpret, baseline=baseline,
+                interpret=interpret, baseline=baseline, topology=topology,
             )
         plans = self.generator.plans(
             matrix, devices=devices, mesh=mesh, block=block, hw=hw,
-            interpret=interpret,
+            interpret=interpret, topology=topology,
         )
         if baseline is not None:
             base_plan, base_impl = baseline
@@ -133,6 +139,7 @@ class Tuner:
                 inc = matrix.plan(
                     scheme=base_plan, impl=base_impl, devices=devices,
                     mesh=mesh, block=block, hw=hw, interpret=interpret,
+                    topology=topology,
                 )
                 if (inc.scheme_id, inc.impl) not in have:
                     plans.insert(0, inc)
@@ -229,6 +236,7 @@ class Tuner:
                 "reason": s.reason,
             },
             "impl": result.best.impl,
+            "topo": result.best.topo_assignment,
             "mean_s": result.best_measurement.mean_s,
             "baseline_scheme_id": result.baseline.scheme_id,
             "baseline_impl": result.baseline.impl,
@@ -247,15 +255,20 @@ class Tuner:
 
     def _from_record(
         self, matrix, record: dict, key: TuneKey, *,
-        devices, mesh, block, hw, interpret, baseline=None,
+        devices, mesh, block, hw, interpret, baseline=None, topology=None,
     ) -> TuningResult:
         """Rebuild the cached winner WITHOUT re-measuring (the cache's whole
         point: re-register never pays the measurement loop again)."""
+        topo_rec = record.get("topo")
+        assignment = None
+        if topology is not None and topo_rec:
+            assignment = {k: topo_rec[k] for k in ("logical", "physical")}
         plan = matrix.plan(
             scheme=record_to_plan(record),
             impl=record.get("impl", "xla"),
             devices=devices, mesh=mesh, block=block, hw=hw,
             interpret=interpret,
+            topology=topology, assignment=assignment,
         )
         best_m = Measurement(
             scheme_id=plan.scheme_id,

@@ -279,6 +279,26 @@ def test_gate_factor_loosens_only_its_row(tmp_path):
     assert [r[0] for r in regressions] == ["loose"]
 
 
+def test_gate_factor_invalid_values_fail_loudly(tmp_path):
+    """A present-but-broken gate_factor must name its row and fail, never
+    coerce: True would otherwise become a silent 1.0x gate."""
+    cb = _check_bench()
+    for bad in ("8x", True, False, 0, -2.5, [8.0]):
+        doc = {"rows": [{"name": "r", "us_per_call": 100.0, "derived": "",
+                         "gate_factor": bad}]}
+        p = tmp_path / "bad.json"
+        p.write_text(json.dumps(doc))
+        with pytest.raises(ValueError, match="'r'.*gate_factor"):
+            cb.load_rows(str(p))
+    # an int gate (valid JSON spelling of a number) still loads
+    doc = {"rows": [{"name": "r", "us_per_call": 100.0, "derived": "",
+                     "gate_factor": 8}]}
+    p = tmp_path / "ok.json"
+    p.write_text(json.dumps(doc))
+    _, gates = cb.load_rows(str(p))
+    assert gates == {"r": 8.0}
+
+
 def test_gate_factor_from_current_run_never_applies(tmp_path):
     cb = _check_bench()
     base_doc = {"rows": [{"name": "r", "us_per_call": 100.0, "derived": ""}]}

@@ -75,6 +75,18 @@ def test_estimate_rides_the_ir():
 # ------------------------------------------------------------ error bounds
 
 
+def test_v1_payload_still_loads():
+    """Pre-topology (v1) records keep loading: the topo key is optional
+    and its absence means 'no placement metadata', never an error."""
+    sm = _sm()
+    ir = sm.plan().to_ir()
+    ir["ir_version"] = 1
+    ir.pop("topo", None)
+    p = plan_from_ir(ir, sm)
+    assert p.topo_assignment is None
+    assert p.scheme_id == sm.plan().scheme_id
+
+
 def test_unknown_ir_version_rejected():
     sm = _sm()
     ir = sm.plan().to_ir()
@@ -161,3 +173,13 @@ def test_ir_grid_cell(ir_grid_output, fmt, scope, dtype):
                                     "2d.equally-wide", "2d.variable-sized"])
 def test_ir_grid_scheme_variant(ir_grid_output, scheme):
     assert f"IR roundtrip scheme.{scheme}: OK" in ir_grid_output
+
+
+@pytest.mark.parametrize("fmt", ["coo", "bcoo"])
+@pytest.mark.parametrize("cell", ["model_pick", "@rows=host,cols=bank",
+                                  "@rows=bank,cols=host"])
+def test_ir_grid_topo_assignment(ir_grid_output, fmt, cell):
+    """IR v2 rehydrates every axis assignment bit-identically (mesh device
+    order included), and the same payload read as v1 still loads."""
+    sep = "." if cell == "model_pick" else ""
+    assert f"IR roundtrip topo.{fmt}{sep}{cell}: OK" in ir_grid_output

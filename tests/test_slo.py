@@ -24,12 +24,17 @@ import pytest
 
 from repro.engine import MicroBatcher, SpmvEngine
 from repro.serve import (
+    CLASS_DEADLINE_DEFAULTS,
+    CLASS_RATE_WEIGHTS,
     SLO_CLASSES,
+    AdmissionController,
     AsyncSpmvService,
     RequestRejected,
     TenantConfig,
     WorkloadSpec,
     class_rank,
+    class_rate_weight,
+    default_deadline,
     generate_trace,
     replay_sync,
     tenant_configs,
@@ -179,6 +184,60 @@ def test_promote_after_s_validation():
         MicroBatcher(_FakeEngine(), promote_after_s=0.0)
 
 
+# --------------------------------------------- class-weighted token buckets
+
+
+def test_class_rate_weights_and_deadline_defaults():
+    assert set(CLASS_RATE_WEIGHTS) == set(SLO_CLASSES)
+    assert set(CLASS_DEADLINE_DEFAULTS) == set(SLO_CLASSES)
+    # urgency-ordered refill: rt > standard > batch
+    assert class_rate_weight("rt") > class_rate_weight("standard") \
+        > class_rate_weight("batch") > 0
+    # only batch carries an implicit SLO; interactive classes state theirs
+    assert default_deadline("batch") is not None and \
+        default_deadline("batch") > 0
+    assert default_deadline("rt") is None
+    assert default_deadline("standard") is None
+    for fn in (class_rate_weight, default_deadline):
+        with pytest.raises(ValueError, match="unknown SLO class"):
+            fn("premium")
+
+
+def test_class_weighted_bucket_refill():
+    """Same nominal rate_rps, three classes: the rt bucket refills twice as
+    fast as standard and four times as fast as batch (injected clock)."""
+    ctrl = AdmissionController()
+    for cls in SLO_CLASSES:
+        ctrl.configure(cls, TenantConfig(rate_rps=10.0, burst=1.0,
+                                         priority=cls, max_pending=None))
+    for cls in SLO_CLASSES:  # drain every bucket's single-token burst
+        ctrl.admit(cls, now=0.0)
+    # +50ms: rt (20 tok/s) has a full token back; standard (10/s) and
+    # batch (5/s) are still short
+    ctrl.admit("rt", now=0.05)
+    for cls in ("standard", "batch"):
+        with pytest.raises(RequestRejected) as ei:
+            ctrl.admit(cls, now=0.05)
+        assert ei.value.reason == "rate_limited"
+    # +100ms: standard catches up; batch still half a token short
+    ctrl.admit("standard", now=0.10)
+    with pytest.raises(RequestRejected):
+        ctrl.admit("batch", now=0.10)
+    # +200ms: batch finally refills — half the standard rate
+    ctrl.admit("batch", now=0.20)
+
+
+def test_burst_capacity_is_not_class_scaled():
+    """The class weight scales *refill*, not burst: how much a tenant may
+    burst is a separate knob from how fast the budget replenishes."""
+    ctrl = AdmissionController()
+    rt = ctrl.configure("rt", TenantConfig(rate_rps=4.0, priority="rt"))
+    std = ctrl.configure("std", TenantConfig(rate_rps=4.0))
+    assert rt.bucket.rate == pytest.approx(8.0)  # 2x refill
+    assert std.bucket.rate == pytest.approx(4.0)
+    assert rt.bucket.burst == std.bucket.burst == pytest.approx(4.0)
+
+
 # ------------------------------------------------- class-aware admission
 
 
@@ -225,6 +284,38 @@ def test_class_aware_queue_wait_admits_tight_rt_deadline():
     shed = svc.metrics.counter("serve.shed", reason="queue_wait_infeasible",
                                cls="standard")
     assert shed.value == 1
+
+
+def test_batch_class_default_deadline_sheds_hopeless_backlog():
+    """A batch request with NO explicit deadline picks up the class default
+    (30s), so queue-wait shedding fires under a backlog it could never
+    clear; a standard request (no class default) is admitted as before."""
+    svc = _classed_service(
+        tenants={"bulk": TenantConfig(priority="batch"),
+                 "std": TenantConfig(priority="standard")},
+        safety=1.0, max_batch=8, buckets=(8,),
+    )
+    svc._est["reg"] = 5.0  # (10 ahead + 1) x 5s = 55s > batch's 30s default
+
+    async def main():
+        x = np.ones(96, np.float32)
+        for _ in range(10):  # standard-class backlog the batch class waits on
+            svc.batcher.submit("reg", x, deadline_s=5.0,
+                               priority=class_rank("standard"),
+                               cls="standard")
+        with pytest.raises(RequestRejected) as ei:
+            await svc.multiply("bulk", "reg", x)  # deadline_s omitted
+        assert ei.value.reason == "queue_wait_infeasible"
+        # standard keeps deadline None -> nothing to shed against
+        y = await svc.multiply("std", "reg", x)
+        assert y.shape == (64,)
+        await svc.aclose()
+
+    asyncio.run(main())
+    snap = svc.admission.snapshot()
+    assert snap["bulk"]["rejected"]["queue_wait_infeasible"] == 1
+    assert snap["bulk"]["completed"] == 0
+    assert snap["std"]["completed"] == 1
 
 
 # ------------------------------------------------------- report & fairness

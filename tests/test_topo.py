@@ -1,0 +1,372 @@
+"""repro.topo — physical topology, axis assignments, collective cost model,
+and topology-aware mesh placement.
+
+Unit tier needs no devices (LinkSpec / AxisAssignment / DeviceTopology /
+CollectiveCostModel are pure metadata + arithmetic; device grids are stood
+in by plain ints).  The integration tier (build_mesh through repro.compat,
+``SparseMatrix.plan(topology=)``, tuner overrule) runs on the 4 forced host
+devices the tier-1 command provides and skips cleanly without them.
+"""
+import math
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.api import SparseMatrix
+from repro.api.plan import fit_plan
+from repro.core.adaptive import Plan
+from repro.topo import (
+    AxisAssignment,
+    CollectiveCostModel,
+    DeviceTopology,
+    FakeTopology,
+    LinkSpec,
+    build_mesh,
+    detect_topology,
+)
+from repro.topo.topology import HOST_LINK, ICI_LINK
+
+needs_mesh = pytest.mark.skipif(
+    jax.device_count() < 4, reason="needs 4 (forced host) devices"
+)
+
+
+def _pim(devices=None) -> FakeTopology:
+    return FakeTopology.pim_like((2, 2), devices=devices)
+
+
+def _dense(shape, seed=0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal(shape).astype(np.float32)
+    a[np.abs(a) < 1.0] = 0.0
+    return a
+
+
+def _sm(shape, seed=0) -> SparseMatrix:
+    return SparseMatrix.from_dense(_dense(shape, seed))
+
+
+# ---------------------------------------------------------------- LinkSpec
+
+
+def test_linkspec_validates():
+    LinkSpec(bandwidth=1e9, latency=0.0)  # zero latency is legal
+    with pytest.raises(ValueError, match="bandwidth"):
+        LinkSpec(bandwidth=0.0, latency=1e-6)
+    with pytest.raises(ValueError, match="bandwidth"):
+        LinkSpec(bandwidth=1e9, latency=-1e-6)
+
+
+# ---------------------------------------------------------- AxisAssignment
+
+
+def test_axis_assignment_tag_group_and_dict_roundtrip():
+    a = AxisAssignment(logical=("rows", "cols"),
+                       physical=(("host",), ("bank",)))
+    assert a.tag == "rows=host,cols=bank"
+    assert a.group("cols") == ("bank",)
+    with pytest.raises(KeyError, match="no logical axis"):
+        a.group("parts")
+    assert AxisAssignment.from_dict(a.to_dict()) == a
+    assert hash(a) == hash(AxisAssignment.from_dict(a.to_dict()))
+
+
+def test_axis_assignment_empty_group_and_arity():
+    a = AxisAssignment(logical=("rows", "cols"),
+                       physical=((), ("host", "bank")))
+    assert a.tag == "rows=-,cols=host*bank"  # empty group renders as "-"
+    with pytest.raises(ValueError, match="arity"):
+        AxisAssignment(logical=("rows",), physical=(("a",), ("b",)))
+
+
+# ---------------------------------------------------------- DeviceTopology
+
+
+def test_topology_constructor_validation():
+    ok = (ICI_LINK, ICI_LINK)
+    with pytest.raises(ValueError, match="at least one"):
+        DeviceTopology((), (), ())
+    with pytest.raises(ValueError, match="duplicate"):
+        DeviceTopology(("a", "a"), (2, 2), ok)
+    with pytest.raises(ValueError, match="lengths differ"):
+        DeviceTopology(("a", "b"), (2,), ok)
+    with pytest.raises(ValueError, match=">= 1"):
+        DeviceTopology(("a", "b"), (2, 0), ok)
+    with pytest.raises(TypeError, match="LinkSpec"):
+        DeviceTopology(("a", "b"), (2, 2), (ICI_LINK, 1e9))
+    with pytest.raises(ValueError, match="devices"):
+        DeviceTopology(("a", "b"), (2, 2), ok, devices=[0, 1, 2])
+
+
+def test_topology_inspection():
+    topo = _pim()
+    assert topo.n_devices == 4
+    assert topo.axis_size("bank") == 2
+    assert topo.link("host").bandwidth == pytest.approx(1e6)
+    with pytest.raises(KeyError, match="no physical axis"):
+        topo.link("ring")
+    assert topo.flat_devices() is None  # abstract until devices are bound
+    assert "pim2x2" in repr(topo)
+
+
+def test_assignments_pim_2x2():
+    cands = _pim().assignments((2, 2), ("rows", "cols"))
+    assert {a.tag for a in cands} == {
+        "rows=host,cols=bank", "rows=bank,cols=host"
+    }
+    # size-1 logical axis takes the empty (free) group; the other axis
+    # absorbs both physical axes in either order
+    cands = _pim().assignments((1, 4), ("rows", "cols"))
+    assert {a.tag for a in cands} == {
+        "rows=-,cols=host*bank", "rows=-,cols=bank*host"
+    }
+
+
+def test_assignments_mismatch_and_arity():
+    assert _pim().assignments((2, 1), ("rows", "cols")) == []  # product != 4
+    assert _pim().assignments((8, 1), ("rows", "cols")) == []
+    with pytest.raises(ValueError, match="arity"):
+        _pim().assignments((2, 2), ("rows",))
+
+
+def test_device_order_contiguous_trick():
+    topo = _pim(devices=list(range(4)))  # grid [[0, 1], [2, 3]]
+    straight, swapped = (
+        AxisAssignment(("rows", "cols"), (("host",), ("bank",))),
+        AxisAssignment(("rows", "cols"), (("bank",), ("host",))),
+    )
+    assert topo.device_order(straight) == [0, 1, 2, 3]
+    # rows on bank means transposing the physical grid before flattening,
+    # so each logical row's neighbours sit on the bank links
+    assert topo.device_order(swapped) == [0, 2, 1, 3]
+
+
+def test_device_order_abstract_topology_needs_devices():
+    topo, a = _pim(), AxisAssignment(("rows", "cols"), (("bank",), ("host",)))
+    with pytest.raises(ValueError, match="abstract"):
+        topo.device_order(a)
+    assert topo.device_order(a, devices=range(4)) == [0, 2, 1, 3]
+    with pytest.raises(ValueError, match="devices"):
+        topo.device_order(a, devices=[0, 1])
+
+
+def test_fake_topology_defaults_and_pim_preset():
+    topo = FakeTopology((2, 2))
+    assert topo.axis_names == ("ax0", "ax1")
+    assert all(l == ICI_LINK for l in topo.links)
+    pim = _pim()
+    assert pim.axis_names == ("host", "bank")
+    assert pim.name == "pim2x2"
+    assert pim.link("bank").bandwidth > pim.link("host").bandwidth * 100
+    with pytest.raises(ValueError, match="2-axis"):
+        FakeTopology.pim_like((2, 2, 2))
+
+
+def test_detect_topology_cpu_fallback():
+    topo = detect_topology(jax.devices())
+    assert topo.axis_names == ("flat",)
+    assert topo.axis_sizes == (jax.device_count(),)
+    assert topo.links == (HOST_LINK,)
+    assert topo.name.endswith(":flat")
+    assert len(topo.flat_devices()) == jax.device_count()
+    with pytest.raises(ValueError, match="no devices"):
+        detect_topology([])
+
+
+# ------------------------------------------------------ CollectiveCostModel
+
+
+def test_group_cost_formula_and_free_groups():
+    model = CollectiveCostModel(_pim())
+    assert model.group_cost((), 1e9) == 0.0
+    # single fast axis, n=2: b/2 / bw + 1 latency step
+    b = 1000.0
+    assert model.group_cost(("bank",), b) == pytest.approx(
+        b * 0.5 / 1e9 + 1e-6
+    )
+    # a group spanning both axes is priced at the bottleneck bandwidth and
+    # the worst latency: n=4 -> 2 tree steps
+    assert model.group_cost(("host", "bank"), b) == pytest.approx(
+        b * 0.75 / 1e6 + 2 * 50e-6
+    )
+    # size-1 physical axes are free
+    slim = FakeTopology((1, 4), axis_names=("one", "many"))
+    assert CollectiveCostModel(slim).group_cost(("one",), b) == 0.0
+
+
+def test_traffic_split_by_crossing_axis():
+    model = CollectiveCostModel(_pim())
+    p2d = Plan("2d", "equally-sized", "coo", "psum_scatter", (2, 2), "t")
+    t = model.traffic(p2d, (64, 128), 4)
+    assert t["load"] == (0, math.ceil(128 / 2) * 4)      # x over rows axis
+    assert t["merge"] == ((1,), math.ceil(64 / 2) * 8)   # y over cols axis
+    # merge="global" all-reduces a full row buffer over BOTH axes
+    t = model.traffic(Plan("2d", "equally-sized", "coo", "global", (2, 2),
+                           "t"), (64, 128), 4)
+    assert t["merge"] == ((0, 1), 64 * 8)
+    # 1D: boundary ppermute is latency-only (zero merge bytes)
+    t = model.traffic(Plan("1d", "nnz", "coo", "ppermute", (4, 1), "t"),
+                      (64, 128), 4)
+    assert t["load"] == (0, math.ceil(128 / 4) * 4)
+    assert t["merge"] == ((0,), 0.0)
+
+
+def test_rank_routes_heavy_direction_onto_fast_axis():
+    model = CollectiveCostModel(_pim())
+    plan = Plan("2d", "equally-sized", "coo", "psum_scatter", (2, 2), "t")
+    # tall: merge (crossing cols) dominates -> cols must ride the bank axis
+    ranked = model.rank(plan, (2048, 128), 4, ("rows", "cols"))
+    assert [a.tag for a, _ in ranked] == [
+        "rows=host,cols=bank", "rows=bank,cols=host"
+    ]
+    assert ranked[0][1]["total_s"] < ranked[-1][1]["total_s"]
+    for _, price in ranked:
+        assert price["total_s"] == pytest.approx(
+            price["load_s"] + price["merge_s"]
+        )
+    # wide: the x broadcast (crossing rows) dominates -> opposite pick
+    best = model.best(plan, (128, 2048), 4, ("rows", "cols"))
+    assert best[0].tag == "rows=bank,cols=host"
+    worst = model.worst(plan, (128, 2048), 4, ("rows", "cols"))
+    assert worst[0].tag == "rows=host,cols=bank"
+    # a grid the topology cannot lay out contiguously prices to nothing
+    unfit = Plan("2d", "equally-sized", "coo", "psum", (8, 1), "t")
+    assert model.rank(unfit, (64, 128), 4, ("rows", "cols")) == []
+
+
+def test_rank_trims_1d_grid_to_its_single_axis():
+    model = CollectiveCostModel(_pim())
+    plan = Plan("1d", "nnz", "coo", "ppermute", (4, 1), "t")
+    ranked = model.rank(plan, (64, 128), 4, ("parts", "ignored"))
+    assert ranked
+    for a, _ in ranked:
+        assert a.logical == ("parts",)
+
+
+def test_fit_plan_topology_prefers_cheap_grid_over_near_square():
+    flat = DeviceTopology(("flat",), (4,), (HOST_LINK,), name="flat4")
+    seed = Plan("2d", "equally-sized", "coo", "psum", (), "r")
+    # near-square is the topology-blind default...
+    assert fit_plan(seed, (64, 4096), 4, (8, 16)).grid == (2, 2)
+    # ...but on one flat axis a wide matrix should put ALL devices on the
+    # cols axis: R=1 makes the heavy x broadcast free (nothing to
+    # replicate across a size-1 rows axis)
+    fitted = fit_plan(seed, (64, 4096), 4, (8, 16), topology=flat)
+    assert fitted.grid == (1, 4)
+
+
+# ------------------------------------------------- build_mesh (integration)
+
+
+@needs_mesh
+def test_build_mesh_model_pick_follows_intensity():
+    topo = _pim(devices=jax.devices()[:4])
+    # the heavier logical axis lands on the fast bank links
+    _, a = build_mesh(topo, (2, 2), intensity={"cols": 1e6, "rows": 1.0})
+    assert a.tag == "rows=host,cols=bank"
+    _, a = build_mesh(topo, (2, 2), intensity={"rows": 1e6, "cols": 1.0})
+    assert a.tag == "rows=bank,cols=host"
+
+
+@needs_mesh
+def test_build_mesh_forced_assignment_and_dict_form():
+    topo = _pim(devices=jax.devices()[:4])
+    forced = AxisAssignment(("rows", "cols"), (("bank",), ("host",)))
+    for spec in (forced, forced.to_dict()):
+        mesh, a = build_mesh(topo, (2, 2), assignment=spec)
+        assert a == forced
+        assert [d.id for d in mesh.devices.flat] \
+            == [d.id for d in topo.device_order(forced)]
+
+
+@needs_mesh
+def test_build_mesh_flat_fallback_when_shape_cannot_lay_out():
+    topo = _pim(devices=jax.devices()[:4])
+    mesh, a = build_mesh(topo, (2, 1))  # product 2 != 4: no contiguous layout
+    assert a is None
+    assert [d.id for d in mesh.devices.flat] \
+        == [d.id for d in jax.devices()[:2]]
+
+
+@needs_mesh
+def test_build_mesh_abstract_topology_takes_devices():
+    mesh, a = build_mesh(_pim(), (2, 2), devices=jax.devices()[:4])
+    assert a is not None
+    assert mesh.devices.size == 4
+    with pytest.raises(ValueError, match="rank-3"):
+        build_mesh(_pim(), (2, 2, 1), devices=jax.devices()[:4])
+
+
+# ----------------------------------------------- api surface (integration)
+
+
+@needs_mesh
+def test_plan_topology_places_by_shape_and_keeps_values():
+    topo = _pim(devices=jax.devices()[:4])
+    rng, picks = np.random.default_rng(1), {}
+    for name, shape in (("tall", (256, 32)), ("wide", (32, 256))):
+        a = _dense(shape, seed=7)
+        sm = SparseMatrix.from_dense(a)
+        plan = sm.plan(scheme="2d.equally-sized", grid=(2, 2), topology=topo)
+        assert plan.topo_assignment is not None
+        assert plan.topo_assignment["topology"] == "pim2x2"
+        assert plan.scheme_id.split("@", 1)[1] in (
+            "rows=host,cols=bank", "rows=bank,cols=host"
+        )
+        assert "topo:" in plan.describe()
+        assert plan.estimate["topo_load_s"] >= 0
+        assert plan.estimate["topo_merge_s"] > 0
+        picks[name] = tuple(map(tuple, plan.topo_assignment["physical"]))
+        # placement changes where the bytes travel, never the values
+        x = rng.standard_normal(shape[1]).astype(np.float32)
+        y = np.asarray(plan.compile()(x))
+        assert np.allclose(y, a @ x, rtol=1e-4, atol=1e-4)
+    assert picks["tall"] != picks["wide"]  # opposite heavy directions
+
+
+@needs_mesh
+def test_plan_forced_assignment_reorders_the_mesh():
+    topo = _pim(devices=jax.devices()[:4])
+    sm = _sm((256, 32), seed=7)
+    model = CollectiveCostModel(topo)
+    auto = sm.plan(scheme="2d.equally-sized", grid=(2, 2), topology=topo)
+    worst, _ = model.worst(auto.scheme, sm.shape, sm.dtype.itemsize,
+                           auto.axes)
+    forced = sm.plan(scheme="2d.equally-sized", grid=(2, 2), topology=topo,
+                     assignment=worst)
+    assert forced.scheme_id.endswith(f"@{worst.tag}")
+    assert forced.scheme_id != auto.scheme_id
+    assert [d.id for d in forced.mesh.devices.flat] \
+        != [d.id for d in auto.mesh.devices.flat]
+    with pytest.raises(ValueError, match="requires topology"):
+        sm.plan(scheme="2d.equally-sized", grid=(2, 2), assignment=worst)
+
+
+@needs_mesh
+def test_tune_measurement_overrules_model_pick():
+    from repro.tune import FakeMeasurer, Tuner
+
+    topo = _pim(devices=jax.devices()[:4])
+    sm = _sm((64, 128), seed=3)
+    # first pass: discover which placed candidates the tuner measures
+    scout = Tuner(measurer=FakeMeasurer(seed=1))
+    scout.tune(sm, devices=topo.flat_devices(), topology=topo)
+    placed = [c for c in scout.measurer.calls if "@rows=" in c]
+    tags = {c.split("@", 1)[1].split("|", 1)[0] for c in placed}
+    assert tags == {"rows=host,cols=bank", "rows=bank,cols=host"}
+    # second pass: force one specific placement to be (fake-)fastest; the
+    # measurement must overrule whatever the cost model would pick
+    target = placed[-1]
+    result = Tuner(measurer=FakeMeasurer(costs={target: 1e-9})).tune(
+        sm, devices=topo.flat_devices(), topology=topo
+    )
+    scheme_id, impl = target.rsplit("|", 1)
+    assert result.best.scheme_id == scheme_id
+    assert result.best.impl == impl
+    want_tag = scheme_id.split("@", 1)[1]
+    got = result.best.topo_assignment
+    assert AxisAssignment(
+        tuple(got["logical"]), tuple(tuple(g) for g in got["physical"])
+    ).tag == want_tag

@@ -18,7 +18,9 @@ gate at 8x because a multi-process replay's wall-clock folds in process
 scheduling and socket round-trips, far noisier than a single-process
 kernel loop.  Per-row gates can only be set in the *committed baseline*
 (review-gated), never by the current run, so a regression cannot loosen
-its own gate.
+its own gate.  A present-but-invalid ``gate_factor`` (non-numeric, bool,
+zero or negative) fails the run loudly with the offending row named —
+a typo'd gate must never silently disable or distort its comparison.
 
     python tools/check_bench.py --baseline BENCH_smoke.json \
         --current bench_out.json [--threshold 2.5]
@@ -51,8 +53,23 @@ def load_rows(path: str) -> tuple[dict, dict]:
         if r.get("kind") == "count":
             continue
         out[r["name"]] = float(r["us_per_call"])
-        if r.get("gate_factor") is not None:
-            gates[r["name"]] = float(r["gate_factor"])
+        gate = r.get("gate_factor")
+        if gate is not None:
+            # a present-but-broken gate must fail LOUDLY, naming the row:
+            # bool would silently coerce (True -> gate 1.0x, flagging every
+            # row), and a string/zero/negative gate would either crash with
+            # a useless message or disable the comparison it claims to tune
+            if isinstance(gate, bool) or not isinstance(gate, (int, float)):
+                raise ValueError(
+                    f"row {r['name']!r} in {path}: gate_factor must be a "
+                    f"positive number, got {gate!r} ({type(gate).__name__})"
+                )
+            if gate <= 0:
+                raise ValueError(
+                    f"row {r['name']!r} in {path}: gate_factor must be "
+                    f"> 0, got {gate!r}"
+                )
+            gates[r["name"]] = float(gate)
     return out, gates
 
 

@@ -8,7 +8,8 @@ Walks README.md and docs/*.md and fails if
   * a backticked dotted symbol starting with ``repro.`` does not resolve to
     an importable module / attribute chain, or
   * a symbol exported via ``__all__`` from the serving-facing packages
-    (:data:`COVERED_MODULES` — ``repro.serve``, ``repro.obs``) is never
+    (:data:`COVERED_MODULES` — ``repro.serve``, ``repro.obs``,
+    ``repro.topo``) is never
     mentioned in any backticked span of the docs corpus: the public surface
     must be documented somewhere a reader can find it.
 
@@ -32,7 +33,7 @@ LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 SYMBOL_RE = re.compile(r"`(repro(?:\.\w+)+)`")
 
 # packages whose entire __all__ surface must appear in the docs corpus
-COVERED_MODULES = ("repro.serve", "repro.obs")
+COVERED_MODULES = ("repro.serve", "repro.obs", "repro.topo")
 
 
 def check_links(md: Path) -> list[str]:
